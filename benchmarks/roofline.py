@@ -1,0 +1,109 @@
+"""Roofline table (required §Roofline): three terms per (arch × shape),
+single-pod 16×16 mesh, from the dry-run + analysis artifacts.
+
+    compute    = HLO_FLOPs(device)      / 197 TFLOP/s   (bf16, TPU v5e)
+    memory     = HLO_bytes(device)      / 819 GB/s      (HBM)
+    collective = wire_bytes(device)     / 50 GB/s       (ICI per link)
+
+FLOPs/bytes come from artifacts/analysis (unrolled-variant extrapolation —
+XLA's cost model gives while bodies constant weight, see launch/analysis.py);
+collective wire bytes use ring-algorithm accounting per op.  MODEL_FLOPS =
+6·N·D (dense) or 6·N_active·D (MoE) counts non-embedding params.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+
+def load_cell(arch, shape, mesh="16x16"):
+    a = ART / "analysis" / f"{arch}__{shape}__{mesh}.json"
+    d = ART / "dryrun" / f"{arch}__{shape}__{mesh}.json"
+    rec = {}
+    if a.exists():
+        rec["analysis"] = json.loads(a.read_text())
+    if d.exists():
+        rec["dryrun"] = json.loads(d.read_text())
+    return rec
+
+
+def model_flops_per_device(dryrun: dict) -> float:
+    """6·N(active)·tokens / chips; decode processes 1 token per sequence."""
+    n = dryrun.get("n_params_active") or dryrun.get("n_params")
+    kind = dryrun["kind"]
+    B, S = dryrun["global_batch"], dryrun["seq_len"]
+    tokens = B if kind == "decode" else B * S
+    mult = 6 if kind == "train" else 2
+    return mult * n * tokens / dryrun.get("n_devices", CHIPS)
+
+
+def roofline_row(arch: str, shape: str) -> dict | None:
+    rec = load_cell(arch, shape)
+    dr = rec.get("dryrun", {})
+    an = rec.get("analysis", {})
+    if dr.get("skipped") or an.get("skipped"):
+        return {"arch": arch, "shape": shape, "skipped": dr.get("skipped") or
+                an.get("skipped")}
+    if not dr.get("ok") or not an.get("ok"):
+        return {"arch": arch, "shape": shape, "error": True}
+    ex = an["extrapolated"]
+    wire = sum(v["wire_bytes"] for v in ex["collectives"].values())
+    t_comp = ex["flops"] / PEAK_FLOPS
+    t_mem = ex["bytes"] / HBM_BW
+    t_coll = wire / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(dr)
+    step_time = max(terms.values())            # no-overlap upper bound
+    mfu = mf / PEAK_FLOPS / step_time if step_time else 0.0
+    return {
+        "arch": arch, "shape": shape,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_dev": mf,
+        "hlo_flops_dev": ex["flops"],
+        "useful_ratio": mf / ex["flops"] if ex["flops"] else 0.0,
+        "roofline_mfu": mfu,
+        "temp_bytes_dev": dr.get("memory", {}).get("temp_size_in_bytes"),
+    }
+
+
+def all_rows():
+    from repro.configs import SHAPES, list_configs
+    rows = []
+    for arch in list_configs():
+        if arch == "paper-overhead-100m":
+            continue
+        for shape in SHAPES:
+            r = roofline_row(arch, shape)
+            if r is not None:
+                rows.append(r)
+    return rows
+
+
+def main():
+    print("arch,shape,t_compute_ms,t_memory_ms,t_collective_ms,dominant,"
+          "useful_flops_ratio,roofline_mfu,temp_GB")
+    for r in all_rows():
+        if r.get("skipped"):
+            print(f"{r['arch']},{r['shape']},SKIP,,,,{r['skipped'][:40]}...")
+            continue
+        if r.get("error"):
+            print(f"{r['arch']},{r['shape']},ERROR,,,,")
+            continue
+        print(f"{r['arch']},{r['shape']},"
+              f"{r['t_compute_s']*1e3:.1f},{r['t_memory_s']*1e3:.1f},"
+              f"{r['t_collective_s']*1e3:.1f},{r['dominant']},"
+              f"{r['useful_ratio']:.3f},{r['roofline_mfu']:.3f},"
+              f"{(r['temp_bytes_dev'] or 0)/1e9:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark driver: one section per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slow real-compute benchmarks")
+    args = ap.parse_args()
+
+    print("=" * 72)
+    print("# Fig 4 — per-component crash recovery (virtual seconds)")
+    print("=" * 72)
+    from benchmarks import recovery_fig4
+    recovery_fig4.main()
+
+    if not args.quick:
+        print()
+        print("=" * 72)
+        print("# Fig 2 — platform overhead vs bare loop (real JAX steps)")
+        print("=" * 72)
+        from benchmarks import overhead_fig2
+        overhead_fig2.main()
+
+        print()
+        print("=" * 72)
+        print("# Fig 3 — dependability fully-armed vs minimal")
+        print("=" * 72)
+        from benchmarks import dependability_fig3
+        dependability_fig3.main()
+
+    print()
+    print("=" * 72)
+    print("# Roofline — per (arch × shape), single-pod 16x16 "
+          "(from dry-run artifacts)")
+    print("=" * 72)
+    from benchmarks import roofline
+    roofline.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: submit a training job to the DLaaS platform, watch it run.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import DLaaSPlatform, JobManifest
+
+
+def main():
+    # a 16-node cluster with core services (API x2, LCM, 3-replica ETCD)
+    platform = DLaaSPlatform(seed=0)
+    platform.run(10)                      # services come up
+
+    manifest = JobManifest(
+        name="my-first-job",
+        framework="qwen3-0.6b",           # any registry architecture
+        learners=4,
+        gpus_per_learner=2,
+        total_steps=100,
+        step_time_s=0.5,
+        checkpoint_interval_s=15.0,       # bound lost work to 15 virtual s
+    )
+    handle = platform.submit(manifest)
+    platform.run(5)
+    print(f"submitted: acked={handle.acked} job_id={handle.job_id}")
+
+    # poll status while it runs
+    for _ in range(6):
+        platform.run(15)
+        st = platform.client.status(handle.job_id)
+        print(f"t={platform.sim.now:7.1f}s  state={st['state']:12s} "
+              f"learners={st['learner_states']}")
+        if st["state"] in ("COMPLETED", "FAILED"):
+            break
+
+    final = platform.run_until_terminal(handle.job_id, timeout=600)
+    print(f"\nfinal state: {final}")
+    print("\ntimeline (first 10 events):")
+    for e in platform.client.events(handle.job_id)[:10]:
+        print(f"  {e['t']:8.2f}  {e['event']}")
+    print("\nlearner-0 log:")
+    print(platform.client.logs(handle.job_id, 0))
+    print(f"gpu-seconds metered: "
+          f"{platform.client.gpu_seconds('default'):.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    RunConfig,
+    ShapeConfig,
+    SHAPES,
+    get_config,
+    get_run_config,
+    list_configs,
+    register,
+    register_run,
+    shape_applicable,
+)

@@ -1,0 +1,18 @@
+"""The paper's own experiments use ~100M-class vision models (VGG/ResNet/
+Inception).  Our LM-substrate equivalent for the Fig-2/3/4 benchmarks: a
+~100M dense transformer trained under the platform vs bare (raw jit loop).
+"""
+from repro.configs.base import GLOBAL_ATTN, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="paper-overhead-100m",
+    family="dense",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=4,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=32_768,
+    block_pattern=(GLOBAL_ATTN,),
+))

@@ -1,0 +1,31 @@
+"""Qwen2.5-32B: dense GQA with QKV bias. [hf:Qwen/Qwen2.5-32B]"""
+from repro.configs.base import GLOBAL_ATTN, ModelConfig, RunConfig, register, register_run
+
+CONFIG = register(ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=27648,
+    vocab_size=152_064,
+    block_pattern=(GLOBAL_ATTN,),
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+))
+
+# §Perf-adopted: 40 Q-heads don't divide the 16-way model axis, so TP
+# replicates attention; context-parallel attention (seq -> model) shards it
+# instead: compute -70%, memory-term -89% (EXPERIMENTS.md §Perf).
+register_run("qwen2.5-32b", "train_4k",
+             RunConfig(num_microbatches=16, remat_policy="full",
+                       sharding_overrides=(("seq", ("model",)),
+                                           ("resid_seq", ("model",)))))
+register_run("qwen2.5-32b", "prefill_32k",
+             RunConfig(sharding_overrides=(("seq", ("model",)),
+                                           ("resid_seq", ("model",)))))
+register_run("qwen2.5-32b", "decode_32k",
+             RunConfig(sharding_overrides=(("batch", ()),
+                                           ("embed_act", ("data",)))))

@@ -1,0 +1,7 @@
+"""The paper's primary contribution: the DLaaS dependability/orchestration
+layer (API → LCM → Guardian → helpers/learners on K8S/ETCD/Mongo analogs)."""
+from repro.core.manifest import JobManifest            # noqa: F401
+from repro.core.platform import DLaaSPlatform          # noqa: F401
+from repro.core.checkpoint import CheckpointManager    # noqa: F401
+from repro.core.objectstore import ObjectStore         # noqa: F401
+from repro.core.sim import Sim                         # noqa: F401

@@ -1,0 +1,112 @@
+"""API service: submission, status, logs, halt (paper §III-c).
+
+Runs as a multi-replica Deployment behind the ``dlaas-api`` service name —
+requests fail over to a live replica.  The dependability contract: a job is
+acked **only after** its metadata is durably in Mongo, so acked jobs are
+never lost, even if every other component crashes immediately after.
+The LCM discovers SUBMITTED jobs from Mongo (reconciliation), so the
+API→LCM handoff itself carries no state that can be lost.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.core.cluster import RpcError
+from repro.core.manifest import JobManifest
+from repro.core.metadata import Unavailable
+
+_job_counter = itertools.count(1)
+
+
+@dataclass
+class SubmitHandle:
+    manifest: JobManifest
+    job_id: Optional[str] = None
+    acked: bool = False
+    rejected: Optional[str] = None
+
+
+def make_api_proc(platform):
+    """API pod main loop: serves queued requests (submissions)."""
+
+    def proc(pod):
+        q = platform.api_queue
+        while True:
+            if not q:
+                yield 0.05
+                continue
+            handle = q.pop(0)
+            err = handle.manifest.validate()
+            if err:
+                handle.rejected = err
+                continue
+            if handle.manifest.tenant not in platform.tenancy.tenants:
+                handle.rejected = f"unknown tenant {handle.manifest.tenant}"
+                continue
+            job_id = f"job-{next(_job_counter):04d}"
+            doc = {"id": job_id, "manifest": asdict(handle.manifest),
+                   "state": "SUBMITTED", "desired_state": "RUNNING",
+                   "restarts": 0,
+                   "events": [{"t": platform.sim.now, "event": "SUBMITTED"}]}
+            # persist BEFORE ack (jobs are never lost once acked)
+            while True:
+                try:
+                    platform.metadata.insert("jobs", job_id, doc)
+                    break
+                except Unavailable:
+                    yield 0.5
+            handle.job_id = job_id
+            handle.acked = True
+            platform.sim.log(f"api: acked {job_id}")
+
+    return proc
+
+
+class ApiClient:
+    """User-facing client: resolves a live API pod per call (load-balanced,
+    fails over); raises RpcError when the API service is fully down."""
+
+    def __init__(self, platform):
+        self.platform = platform
+
+    def _endpoint(self):
+        return self.platform.cluster.rpc("dlaas-api")    # RpcError if down
+
+    def submit(self, manifest: JobManifest) -> SubmitHandle:
+        self._endpoint()
+        h = SubmitHandle(manifest)
+        self.platform.api_queue.append(h)
+        return h
+
+    def status(self, job_id: str) -> Dict[str, Any]:
+        self._endpoint()
+        doc = self.platform.metadata.get("jobs", job_id)
+        if doc is None:
+            raise KeyError(job_id)
+        return {"id": doc["id"], "state": doc["state"],
+                "restarts": doc.get("restarts", 0),
+                "learner_states": doc.get("learner_states")}
+
+    def events(self, job_id: str) -> List[dict]:
+        self._endpoint()
+        doc = self.platform.metadata.get("jobs", job_id)
+        return list(doc.get("events", [])) if doc else []
+
+    def logs(self, job_id: str, learner: int = 0) -> str:
+        """Logs stream from the object store — readable even after crashes."""
+        self._endpoint()
+        key = f"cos/{job_id}/logs/{learner}"
+        if not self.platform.objectstore.exists(key):
+            return ""
+        return self.platform.objectstore.get(key).decode()
+
+    def halt(self, job_id: str) -> None:
+        self._endpoint()
+        self.platform.metadata.update("jobs", job_id,
+                                      {"desired_state": "HALTED"})
+
+    def gpu_seconds(self, tenant: str) -> float:
+        self._endpoint()
+        return self.platform.tenancy.metering.gpu_seconds(tenant)

@@ -1,0 +1,300 @@
+"""The Guardian: per-job agent run as a K8S Job (paper §III-d/e/f).
+
+Atomic deployment: the Guardian performs the multi-step deploy (volume,
+network policy, gang admission, helper pod, learner stateful set).  Because
+it runs under K8S-Job semantics, a crash at ANY step restarts it with fresh
+process state; the restarted incarnation first **rolls back** whatever the
+previous incarnation partially deployed (recorded step-by-step in ETCD),
+then redeploys from scratch.  After ``backoff_limit`` exhaustion the job is
+marked FAILED in Mongo by the LCM.
+
+After a successful deploy the Guardian monitors: aggregates per-learner
+statuses from ETCD into the job document, counts learner restarts against
+``max_restarts``, emits user-visible timestamped events (restarts included —
+users' training-progress graphs differ after a failure, §II), detects
+stragglers, and garbage-collects all job resources at the end.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+from repro.core.cluster import ContainerSpec, Deployment, PodSpec, StatefulSet
+from repro.core.helper import (
+    make_controller_proc, make_load_data_proc, make_log_collector_proc,
+    make_store_results_proc)
+from repro.core.learner import make_learner_proc
+from repro.core.manifest import JobManifest
+from repro.core.metadata import Unavailable
+from repro.core.recovery import StragglerDetector
+
+DEPLOY_STEP_TIME = (0.1, 0.4)        # per multi-step-deploy action
+MONITOR_PERIOD = 1.0
+
+# Fig-4 startup ranges
+HELPER_STARTUP = (3.0, 4.0)
+LEARNER_STARTUP = (10.0, 20.0)
+
+
+def make_guardian_proc(platform, job_id: str, manifest: JobManifest):
+    def proc(pod):
+        sim = platform.sim
+        store = platform.statestore
+        cluster = platform.cluster
+
+        # -- helpers --------------------------------------------------------
+        def update_job(fields: Dict[str, Any], event: str = None):
+            while True:
+                try:
+                    platform.metadata.update("jobs", job_id, fields)
+                    if event:
+                        platform.metadata.append_event(
+                            "jobs", job_id,
+                            {"t": sim.now, "event": event})
+                    return
+                except Unavailable:
+                    yield 0.5
+
+        # ---- 1. read prior deploy record; roll back partial deployment ----
+        prior = store.try_get(f"deploy/{job_id}/resources", [])
+        if prior:
+            sim.log(f"guardian/{job_id}: rolling back partial deploy {prior}")
+            yield from _rollback(platform, job_id, manifest, prior)
+            yield from store.put(f"deploy/{job_id}/resources", [])
+            yield from update_job(
+                {}, event="ROLLBACK of partial deployment")
+
+        # ---- 2. multi-step atomic deploy ------------------------------------
+        resources: List[str] = []
+
+        def record(res: str):
+            resources.append(res)
+            return store.put(f"deploy/{job_id}/resources", resources)
+
+        yield from update_job({"state": "DEPLOYING"}, "DEPLOYING")
+
+        # (a) shared NFS volume
+        yield sim.rng.uniform(*DEPLOY_STEP_TIME)
+        platform.volumes.provision(f"vol-{job_id}")
+        ok = yield from record(f"volume/vol-{job_id}")
+        if not ok:
+            raise RuntimeError("etcd unavailable during deploy")
+
+        # (b) network policy for tenant isolation
+        yield sim.rng.uniform(*DEPLOY_STEP_TIME)
+        platform.netpolicies[job_id] = {"tenant": manifest.tenant,
+                                        "job": job_id}
+        yield from record(f"netpolicy/{job_id}")
+
+        # (c) gang admission (quota + capacity, all-or-nothing).  Elastic
+        # jobs admit the largest feasible world when full capacity is gone
+        # (e.g. a redeploy after a node died) instead of failing.
+        yield sim.rng.uniform(*DEPLOY_STEP_TIME)
+        world = manifest.learners
+        try:
+            platform.scheduler.admit_gang(
+                cluster, manifest.tenant, world, manifest.gpus_per_learner)
+        except Exception:
+            if not manifest.elastic:
+                raise
+            world = platform.scheduler.max_feasible_gang(
+                cluster, manifest.gpus_per_learner, manifest.learners)
+            if world < 1:
+                raise
+            platform.scheduler.admit_gang(
+                cluster, manifest.tenant, world, manifest.gpus_per_learner)
+            yield from update_job(
+                {"world": world},
+                f"ELASTIC admission {manifest.learners} -> {world}")
+        platform.gang_sizes[job_id] = world
+        platform.volumes.get(f"vol-{job_id}").write("world", world)
+        yield from record(f"gang/{job_id}")
+
+        # (d) helper pod (controller, load-data, log-collector, store-results)
+        yield sim.rng.uniform(*DEPLOY_STEP_TIME)
+        helper_spec = lambda i: PodSpec(
+            name=f"helper-{job_id}",
+            containers=[
+                ContainerSpec("load-data", make_load_data_proc(platform, job_id, manifest)),
+                ContainerSpec("controller", make_controller_proc(platform, job_id, manifest)),
+                ContainerSpec("log-collector", make_log_collector_proc(platform, job_id, manifest)),
+                ContainerSpec("store-results", make_store_results_proc(platform, job_id, manifest)),
+            ],
+            startup_range=HELPER_STARTUP,
+            labels={"role": "helper", "job": job_id},
+            tenant=manifest.tenant)
+        platform.deployments[f"helper-{job_id}"] = Deployment(
+            cluster, f"helper-{job_id}", helper_spec, replicas=1)
+        yield from record(f"deployment/helper-{job_id}")
+
+        # (e) learner stateful set (stable identities learner-<job>-i)
+        yield sim.rng.uniform(*DEPLOY_STEP_TIME)
+        mk = lambda i: PodSpec(
+            name=f"learner-{job_id}-{i}",
+            containers=[ContainerSpec(
+                "learner", make_learner_proc(platform, job_id, manifest, i))],
+            gpus=manifest.gpus_per_learner,
+            startup_range=LEARNER_STARTUP,
+            labels={"role": "learner", "job": job_id,
+                    "tenant": manifest.tenant},
+            tenant=manifest.tenant)
+        ss = StatefulSet(cluster, f"learners-{job_id}", mk, replicas=world)
+        platform.statefulsets[f"learners-{job_id}"] = ss
+        yield from record(f"statefulset/learners-{job_id}")
+
+        platform.tenancy.metering.job_started(
+            job_id, manifest.tenant,
+            manifest.learners * manifest.gpus_per_learner, sim.now)
+        yield from update_job({"state": "PROCESSING"}, "PROCESSING")
+
+        # ---- 3. monitor until completion/failure/halt -------------------------
+        from repro.core.elastic import ElasticPolicy
+        straggler = StragglerDetector(manifest.learners)
+        elastic = ElasticPolicy(min_world=1)
+        learner_failures = 0
+        seen_restarts = [0] * manifest.learners
+        last_agg = None
+        pending_since: Dict[int, float] = {}
+        vol = platform.volumes.get(f"vol-{job_id}")
+        while True:
+            yield MONITOR_PERIOD
+
+            # ---- elastic DP shrink: a learner stuck PENDING (capacity lost,
+            # e.g. node died with no spare GPUs) stalls synchronous training
+            # forever; if the job opted in, shrink the world instead.
+            if manifest.elastic:
+                world = vol.read("world", manifest.learners)
+                stuck = 0
+                for i, p in enumerate(ss.pods[:world]):
+                    if p.status == "PENDING":
+                        pending_since.setdefault(i, sim.now)
+                        if sim.now - pending_since[i] > 25.0:
+                            stuck += 1
+                    else:
+                        pending_since.pop(i, None)
+                if stuck:
+                    new_world = elastic.decide(world, world - stuck)
+                    if new_world and new_world < world:
+                        plan = elastic.remesh_plan(world, new_world, 256)
+                        vol.write("world", new_world)
+                        vol.write("remesh",
+                                  {"old": world, "new": new_world,
+                                   "shard_map": {str(k): v for k, v in
+                                                 plan.shard_map.items()}})
+                        ss.resize(new_world)
+                        platform.scheduler.release_gang(
+                            manifest.tenant, world - new_world,
+                            manifest.gpus_per_learner)
+                        platform.gang_sizes[job_id] = new_world
+                        yield from update_job(
+                            {"world": new_world},
+                            f"ELASTIC shrink {world} -> {new_world} "
+                            f"(capacity lost; DP re-mesh)")
+                        pending_since.clear()
+
+            # user-initiated halt?
+            try:
+                doc = platform.metadata.get("jobs", job_id)
+            except Unavailable:
+                doc = None
+            if doc and doc.get("desired_state") == "HALTED":
+                yield from _teardown(platform, job_id, manifest, store)
+                yield from update_job({"state": "HALTED"}, "HALTED by user")
+                platform.tenancy.metering.job_stopped(job_id, sim.now)
+                return 0
+
+            # count learner pod restarts (failure detection by K8S + ss)
+            for i in range(min(len(ss.restarts_total), len(seen_restarts))):
+                if ss.restarts_total[i] > seen_restarts[i]:
+                    learner_failures += ss.restarts_total[i] - seen_restarts[i]
+                    seen_restarts[i] = ss.restarts_total[i]
+                    yield from update_job(
+                        {"restarts": learner_failures},
+                        f"learner-{i} RESTARTED "
+                        f"(total restarts {learner_failures})")
+
+            if learner_failures > manifest.max_restarts:
+                yield from _teardown(platform, job_id, manifest, store)
+                yield from update_job(
+                    {"state": "FAILED"},
+                    f"FAILED: restarts {learner_failures} > "
+                    f"max_restarts {manifest.max_restarts}")
+                platform.tenancy.metering.job_stopped(job_id, sim.now)
+                return 0
+
+            # aggregate learner statuses from ETCD -> Mongo
+            world = vol.read("world", manifest.learners) if vol else \
+                manifest.learners
+            sts = [store.try_get(f"status/{job_id}/learner/{i}")
+                   for i in range(world)]
+            if all(s and s["state"] == "SUCCEEDED" for s in sts):
+                # let the helper finish log shipping + results upload first
+                helper = platform.deployments.get(f"helper-{job_id}")
+                deadline = sim.now + 60.0
+                while helper is not None and not helper.all_succeeded() \
+                        and sim.now < deadline:
+                    yield 1.0
+                yield from _teardown(platform, job_id, manifest, store)
+                yield from update_job({"state": "COMPLETED"}, "COMPLETED")
+                platform.tenancy.metering.job_stopped(job_id, sim.now)
+                return 0
+
+            agg = _aggregate(sts)
+            if agg != last_agg:
+                yield from update_job(
+                    {"learner_states": agg}, f"status: {agg}")
+                last_agg = agg
+
+            # straggler detection from heartbeat progress
+            steps_list = [s.get("step") if s else None for s in sts]
+            steps_list += [None] * (manifest.learners - len(steps_list))
+            slow = straggler.update(sim.now, steps_list)
+            for i in slow:
+                yield from update_job(
+                    {}, f"learner-{i} STRAGGLER (progress lag); restarting")
+                cluster.kubectl_delete_pod(f"learner-{job_id}-{i}")
+
+    return proc
+
+
+def _aggregate(sts) -> str:
+    states = [s["state"] if s else "UNKNOWN" for s in sts]
+    order = ["FAILED", "UNREACHABLE", "STARTING", "UNKNOWN", "RUNNING",
+             "SUCCEEDED"]
+    for o in order:
+        if o in states:
+            worst = o
+            break
+    steps = [s.get("step") for s in sts if s and s.get("step") is not None]
+    return f"{worst} (min step {min(steps) if steps else 0})"
+
+
+def _rollback(platform, job_id, manifest, resources):
+    """Delete partially-created resources in reverse creation order."""
+    for res in reversed(resources):
+        kind, name = res.split("/", 1)
+        yield platform.sim.rng.uniform(*DEPLOY_STEP_TIME)
+        if kind == "statefulset" and name in platform.statefulsets:
+            ss = platform.statefulsets.pop(name)
+            ss.delete()
+            for p in ss.pods:
+                p.fail()
+        elif kind == "deployment" and name in platform.deployments:
+            d = platform.deployments.pop(name)
+            d.delete()
+            for p in d.pods:
+                p.fail()
+        elif kind == "gang":
+            n = platform.gang_sizes.pop(job_id, manifest.learners)
+            platform.scheduler.release_gang(
+                manifest.tenant, n, manifest.gpus_per_learner)
+        elif kind == "netpolicy":
+            platform.netpolicies.pop(job_id, None)
+        elif kind == "volume":
+            platform.volumes.release(name)
+
+
+def _teardown(platform, job_id, manifest, store):
+    """Orderly cleanup at job end (volume contents are shipped already)."""
+    res = store.try_get(f"deploy/{job_id}/resources", [])
+    yield from _rollback(platform, job_id, manifest, res)
+    yield from store.put(f"deploy/{job_id}/resources", [])

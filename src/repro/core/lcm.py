@@ -1,0 +1,92 @@
+"""Lifecycle Manager: owns jobs from submission to completion (§III-c/d).
+
+Reconciliation-loop design (our K8S-idiomatic adaptation of the paper's
+API→LCM gRPC handoff, recorded in DESIGN.md): the LCM polls Mongo for
+SUBMITTED jobs and creates a **Guardian K8S Job** for each — a quick single
+step (paper: <3 s), after which K8S owns guardian restarts.  An LCM crash
+loses nothing: the next incarnation resumes from Mongo state.  Garbage
+collection reaps resources of terminal jobs whose guardian died for good.
+"""
+from __future__ import annotations
+
+from repro.core.cluster import ContainerSpec, KJob, PodSpec
+from repro.core.guardian import make_guardian_proc, _rollback
+from repro.core.manifest import JobManifest
+from repro.core.metadata import Unavailable
+
+GUARDIAN_STARTUP = (1.0, 2.0)        # Fig-4: guardian creation < 3 s
+GUARDIAN_BACKOFF_LIMIT = 6
+POLL = 1.0
+
+
+def make_lcm_proc(platform):
+    def proc(pod):
+        sim = platform.sim
+        while True:
+            yield POLL
+            try:
+                subs = platform.metadata.find(
+                    "jobs", lambda d: d["state"] == "SUBMITTED")
+                terminal = platform.metadata.find(
+                    "jobs", lambda d: d["state"] in
+                    ("COMPLETED", "FAILED", "HALTED"))
+            except Unavailable:
+                continue
+
+            for doc in subs:
+                job_id = doc["id"]
+                if job_id in platform.guardians:
+                    continue                     # another LCM replica won
+                manifest = JobManifest(**doc["manifest"])
+                spec = PodSpec(
+                    name=f"guardian-{job_id}",
+                    containers=[ContainerSpec(
+                        "guardian",
+                        make_guardian_proc(platform, job_id, manifest))],
+                    startup_range=GUARDIAN_STARTUP,
+                    labels={"role": "guardian", "job": job_id})
+
+                def on_exhausted(job_id=job_id, manifest=manifest):
+                    # guardian retries exhausted -> FAIL the job + reap
+                    def reaper():
+                        res = platform.statestore.try_get(
+                            f"deploy/{job_id}/resources", [])
+                        yield from _rollback(platform, job_id, manifest, res)
+                        try:
+                            platform.metadata.update(
+                                "jobs", job_id, {"state": "FAILED"})
+                            platform.metadata.append_event(
+                                "jobs", job_id,
+                                {"t": sim.now,
+                                 "event": "FAILED: guardian backoff exhausted"})
+                        except Unavailable:
+                            pass
+                    sim.spawn(reaper())
+
+                platform.guardians[job_id] = KJob(
+                    platform.cluster, f"guardian-{job_id}", spec,
+                    backoff_limit=GUARDIAN_BACKOFF_LIMIT,
+                    on_exhausted=on_exhausted)
+                try:
+                    platform.metadata.update("jobs", job_id,
+                                             {"state": "DEPLOYING"})
+                except Unavailable:
+                    pass
+                sim.log(f"lcm: guardian created for {job_id}")
+
+            # GC: terminal job whose learner set still exists (guardian died
+            # before teardown) — safety net
+            for doc in terminal:
+                job_id = doc["id"]
+                name = f"learners-{job_id}"
+                if name in platform.statefulsets:
+                    manifest = JobManifest(**doc["manifest"])
+                    res = platform.statestore.try_get(
+                        f"deploy/{job_id}/resources", [])
+                    if res:
+                        sim.log(f"lcm: gc {job_id}")
+                        yield from _rollback(platform, job_id, manifest, res)
+                        yield from platform.statestore.put(
+                            f"deploy/{job_id}/resources", [])
+
+    return proc

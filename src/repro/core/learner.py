@@ -1,0 +1,163 @@
+"""Learner container processes (the DL job's compute).
+
+Synchronous data-parallel semantics are modeled honestly: each learner
+advances a step only when every peer's heartbeat is fresh — a dead peer
+stalls the group exactly like a blocking all-reduce.  Recovery follows the
+paper §III-h:
+
+* ``checkpoint`` mode — the whole group rolls back to the latest checkpoint
+  (work lost = time since last checkpoint, set by the user's interval);
+* ``rejoin`` mode — the restarted learner fetches current parameters from
+  its peers (parameter-server style) and the group continues (work lost ≈
+  restart time only).
+
+``real_compute`` learners run actual JAX training steps and persist real
+parameter trees through the CheckpointManager — crash + restore with loss
+continuity is exercised end-to-end in examples/fault_tolerance.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from repro.core.checkpoint import CheckpointManager
+from repro.core.manifest import JobManifest
+
+HEARTBEAT_STALE = 3.0          # × step_time ⇒ peer considered unreachable
+RESTORE_TIME = (1.0, 3.0)      # checkpoint download+load (virtual)
+SAVE_TIME = (0.5, 1.5)         # checkpoint upload (virtual)
+
+
+class RealPayload:
+    """Actual JAX training, injected via platform.register_payload()."""
+
+    def __init__(self, make_state, train_step, data, loss_key="loss"):
+        self.make_state = make_state        # () -> TrainState
+        self.train_step = train_step        # (state, batch) -> (state, metrics)
+        self.data = data                    # .batch_at(step)
+        self.loss_key = loss_key
+        self.state = None
+
+    def restore(self, tree: Optional[Any]) -> int:
+        import jax.numpy as jnp
+        self.state = self.make_state()
+        if tree is None:
+            return 0
+        # overlay restored leaves (they come back as numpy)
+        import jax
+        self.state = jax.tree.map(
+            lambda cur, new: jnp.asarray(new).astype(cur.dtype), self.state,
+            tree)
+        return int(self.state["step"])
+
+    def step(self, step_idx: int) -> float:
+        self.state, metrics = self.train_step(
+            self.state, self.data.batch_at(step_idx))
+        return float(metrics[self.loss_key])
+
+    def snapshot(self):
+        import jax
+        return jax.tree.map(lambda x: x, self.state)
+
+
+def make_learner_proc(platform, job_id: str, manifest: JobManifest, idx: int):
+    """Container process for learner ``idx`` of ``job_id``."""
+
+    def proc(pod):
+        sim = platform.sim
+        vol = platform.volumes.get(f"vol-{job_id}")
+        if vol is None:
+            raise RuntimeError("volume not mounted")
+        ckpt = CheckpointManager(platform.objectstore, job_id)
+        payload = platform.payloads.get(job_id) if manifest.real_compute else None
+
+        # -- wait for load-data helper ------------------------------------
+        while not vol.read("data_ready"):
+            yield 0.2
+
+        # -- restore ---------------------------------------------------------
+        yield sim.rng.uniform(*RESTORE_TIME)
+        step = 0
+        rollback = vol.read("rollback_to")
+        group_steps = [vol.read(f"progress/{j}", {"step": 0})["step"]
+                       for j in range(manifest.learners)]
+        if manifest.extras.get("recovery_mode", "checkpoint") == "rejoin" and \
+                max(group_steps) > 0:
+            step = max(group_steps)           # catch up from peers (PS-style)
+            vol.append(f"log/{idx}", f"[{sim.now:.2f}] rejoined at step {step}")
+        else:
+            loaded = ckpt.load()
+            if loaded is not None:
+                step = int(loaded[0])
+                if payload is not None:
+                    payload.restore(loaded[1])
+                vol.append(f"log/{idx}",
+                           f"[{sim.now:.2f}] restored checkpoint step {step}")
+            elif payload is not None:
+                payload.restore(None)
+        last_ckpt_t = sim.now
+
+        vol.write(f"progress/{idx}", {"step": step, "t": sim.now})
+
+        # -- train loop ---------------------------------------------------------
+        while step < manifest.total_steps:
+            # group rollback marker (checkpoint-mode recovery)
+            rb = vol.read("rollback_to")
+            if rb is not None and rb.get("epoch", -1) > \
+                    vol.read(f"rb_ack/{idx}", -1):
+                step = min(step, rb["step"])
+                vol.write(f"rb_ack/{idx}", rb["epoch"])
+                if payload is not None:
+                    loaded = ckpt.load(rb["step"]) or ckpt.load()
+                    if loaded is not None:
+                        payload.restore(loaded[1])
+                vol.append(f"log/{idx}",
+                           f"[{sim.now:.2f}] rolled back to step {step}")
+
+            # synchronous DP: stall while any peer heartbeat is stale
+            # (a finished peer — exit file present — no longer heartbeats).
+            # World size is dynamic (elastic re-meshing shrinks it).
+            world = vol.read("world", manifest.learners)
+            if idx >= world:
+                return 0                      # resized away (defensive)
+            stale = False
+            for j in range(world):
+                if j == idx or vol.read(f"exit/{j}") is not None:
+                    continue
+                pr = vol.read(f"progress/{j}")
+                if pr is None or (sim.now - pr["t"]) > \
+                        HEARTBEAT_STALE * manifest.step_time_s + 2.0:
+                    stale = True
+            if stale:
+                vol.write(f"progress/{idx}",
+                          {"step": step, "t": sim.now, "stalled": True})
+                yield manifest.step_time_s
+                continue
+
+            # one training step
+            if payload is not None:
+                loss = payload.step(step)
+                vol.write("last_loss", loss)
+            yield manifest.step_time_s
+            step += 1
+            vol.write(f"progress/{idx}", {"step": step, "t": sim.now})
+            if step % 50 == 0:
+                vol.append(f"log/{idx}", f"[{sim.now:.2f}] step {step}")
+
+            # periodic checkpoint (chief learner)
+            if idx == 0 and (sim.now - last_ckpt_t) >= manifest.checkpoint_interval_s:
+                tree = payload.snapshot() if payload is not None \
+                    else {"step": step}
+                import numpy as np
+                tree = tree if payload is not None else {
+                    "step": np.asarray(step)}
+                ckpt.save(step, tree)
+                last_ckpt_t = sim.now
+                vol.append(f"log/{idx}", f"[{sim.now:.2f}] checkpoint @ {step}")
+                yield sim.rng.uniform(*SAVE_TIME)
+
+        # -- orderly exit: write exit code to the shared volume --------------
+        vol.write(f"exit/{idx}", 0)
+        vol.append(f"log/{idx}", f"[{sim.now:.2f}] done ({step} steps)")
+        return 0
+
+    return proc

@@ -1,0 +1,42 @@
+"""Job manifest — what a user submits (paper §III-a).
+
+``framework`` names one of the registry architectures: the platform treats
+architectures the way DLaaS treats frameworks (opaque learner payloads).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+@dataclass(frozen=True)
+class JobManifest:
+    name: str
+    tenant: str = "default"
+    framework: str = "paper-overhead-100m"    # architecture id
+    learners: int = 1
+    gpus_per_learner: int = 1
+    # training params
+    total_steps: int = 100
+    step_time_s: float = 0.5                  # virtual step time (sim learners)
+    checkpoint_interval_s: float = 30.0       # user-configured (paper §III-g)
+    max_restarts: int = 3
+    elastic: bool = False                     # allow DP shrink on learner loss
+    priority: int = 0
+    # data / results
+    data_source: str = "cos://datasets/synthetic"
+    dataset_gb: float = 1.0
+    result_location: str = "cos://results"
+    # learner payload knobs (real learners)
+    real_compute: bool = False                # run actual JAX steps
+    seed: int = 0
+    extras: Dict[str, str] = field(default_factory=dict)
+
+    def validate(self) -> Optional[str]:
+        if self.learners < 1:
+            return "learners must be >= 1"
+        if self.gpus_per_learner < 0:
+            return "gpus_per_learner must be >= 0"
+        if self.checkpoint_interval_s <= 0:
+            return "checkpoint_interval_s must be > 0"
+        return None

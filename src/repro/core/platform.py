@@ -1,0 +1,124 @@
+"""DLaaSPlatform: the assembled system (paper Fig. 1).
+
+Layers:
+* platform layer — cluster (K8S analog), 3-replica Raft statestore (ETCD),
+  metadata store (Mongo), object store (COS), volume manager (NFS);
+* core services — API (2-replica Deployment), LCM (Deployment);
+* per-job — Guardian (K8S Job), helper pod, learner StatefulSet.
+
+Fault injection mirrors the paper's evaluation: ``kubectl_delete_pod`` for
+Fig-4 component kills, ``crash_node`` for machine failures, plus statestore
+replica crashes and metadata-store outages.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+from repro.core.api import ApiClient, SubmitHandle, make_api_proc
+from repro.core.cluster import Cluster, ContainerSpec, Deployment, PodSpec
+from repro.core.lcm import make_lcm_proc
+from repro.core.manifest import JobManifest
+from repro.core.metadata import MetadataStore
+from repro.core.objectstore import ObjectStore
+from repro.core.scheduler import Scheduler
+from repro.core.sim import Sim
+from repro.core.statestore import StateStore
+from repro.core.tenancy import NetworkPolicy, TenancyManager
+from repro.core.volumes import VolumeManager
+
+# Fig-4 startup ranges for core-service pods
+API_STARTUP = (3.0, 5.0)
+LCM_STARTUP = (4.0, 6.0)
+
+
+class DLaaSPlatform:
+    def __init__(self, seed: int = 0, n_nodes: int = 16,
+                 gpus_per_node: int = 8, api_replicas: int = 2,
+                 lcm_replicas: int = 1):
+        self.sim = Sim(seed=seed)
+        self.cluster = Cluster(self.sim, n_nodes=n_nodes,
+                               gpus_per_node=gpus_per_node)
+        self.tenancy = TenancyManager()
+        self.scheduler = Scheduler(self.tenancy)
+        self.cluster.scheduler = self.scheduler
+        self.statestore = StateStore(self.sim, n_replicas=3)
+        self.metadata = MetadataStore()
+        self.objectstore = ObjectStore()
+        self.volumes = VolumeManager()
+        self.netpolicy = NetworkPolicy()
+
+        # mutable registries
+        self.api_queue: List[SubmitHandle] = []
+        self.guardians: Dict[str, Any] = {}
+        self.statefulsets: Dict[str, Any] = {}
+        self.deployments: Dict[str, Any] = {}
+        self.netpolicies: Dict[str, Dict] = {}
+        self.gang_sizes: Dict[str, int] = {}
+        self.payloads: Dict[str, Any] = {}      # job_id -> RealPayload
+
+        # core services
+        self.api_deployment = Deployment(
+            self.cluster, "dlaas-api",
+            lambda i: PodSpec(name=f"api-{i}",
+                              containers=[ContainerSpec(
+                                  "api", make_api_proc(self))],
+                              startup_range=API_STARTUP,
+                              labels={"role": "api"}),
+            replicas=api_replicas, service="dlaas-api")
+        self.lcm_deployment = Deployment(
+            self.cluster, "dlaas-lcm",
+            lambda i: PodSpec(name=f"lcm-{i}",
+                              containers=[ContainerSpec(
+                                  "lcm", make_lcm_proc(self))],
+                              startup_range=LCM_STARTUP,
+                              labels={"role": "lcm"}),
+            replicas=lcm_replicas, service="dlaas-lcm")
+        self.client = ApiClient(self)
+
+    # ------------------------------------------------------------------
+    def run(self, seconds: float) -> None:
+        self.sim.run_for(seconds)
+
+    def run_until_terminal(self, job_id: str, timeout: float = 3600.0,
+                           tick: float = 5.0) -> str:
+        deadline = self.sim.now + timeout
+        while self.sim.now < deadline:
+            self.run(tick)
+            try:
+                doc = self.metadata.get("jobs", job_id)
+            except Exception:
+                continue
+            if doc and doc["state"] in ("COMPLETED", "FAILED", "HALTED"):
+                return doc["state"]
+        return "TIMEOUT"
+
+    # -- convenience passthroughs ------------------------------------------
+    def submit(self, manifest: JobManifest) -> SubmitHandle:
+        return self.client.submit(manifest)
+
+    def register_payload(self, job_id: str, payload) -> None:
+        self.payloads[job_id] = payload
+
+    # -- fault injection -------------------------------------------------------
+    def kill_pod(self, name: str) -> bool:
+        return self.cluster.kubectl_delete_pod(name)
+
+    def crash_node_of(self, pod_name: str) -> Optional[str]:
+        for pod in self.cluster.pods.values():
+            if pod.spec.name == pod_name and pod.status == "RUNNING":
+                node = pod.node.name
+                self.cluster.crash_node(node)
+                return node
+        return None
+
+    # -- observability ------------------------------------------------------------
+    def recovery_time(self, pod_name: str, after_t: float) -> Optional[float]:
+        """Virtual seconds from ``after_t`` until a pod with this name is
+        RUNNING again (Fig-4 measurement)."""
+        best = None
+        for pod in self.cluster.pods.values():
+            if pod.spec.name == pod_name and pod.started_at is not None \
+                    and pod.started_at >= after_t and pod.status == "RUNNING":
+                t = pod.started_at - after_t
+                best = t if best is None else min(best, t)
+        return best

@@ -1,0 +1,75 @@
+"""Placement: gang scheduling + tenant quotas + bin-packing.
+
+Distributed DL learners are useless in fractions — a job's learner pods are
+admitted all-or-nothing (gang).  Placement packs GPUs to minimize
+fragmentation; spread across nodes is available for fault-domain diversity.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.cluster import Cluster, Node, PodSpec
+from repro.core.tenancy import TenancyManager, QuotaExceeded
+
+
+class Unschedulable(Exception):
+    pass
+
+
+class Scheduler:
+    def __init__(self, tenancy: TenancyManager, strategy: str = "binpack"):
+        self.tenancy = tenancy
+        self.strategy = strategy
+
+    # per-pod placement hook used by Cluster._create_pod
+    def place(self, cluster: Cluster, spec: PodSpec) -> Node:
+        nodes = [n for n in cluster.nodes if n.alive and
+                 n.gpus_free() >= spec.gpus]
+        if not nodes:
+            raise Unschedulable(f"no node fits pod {spec.name} "
+                                f"({spec.gpus} GPUs)")
+        # system pods (0 GPUs) spread across nodes for fault-domain
+        # diversity; GPU pods bin-pack to minimize fragmentation
+        if spec.gpus == 0:
+            return min(nodes, key=lambda n: sum(1 for p in n.pods
+                                                if p.spec.gpus == 0))
+        if self.strategy == "binpack":      # fullest node that still fits
+            return min(nodes, key=lambda n: n.gpus_free())
+        return max(nodes, key=lambda n: n.gpus_free())   # spread
+
+    def max_feasible_gang(self, cluster: Cluster, gpus_each: int,
+                          upper: int) -> int:
+        """Largest world size ≤ upper that fits current live capacity."""
+        free = sorted((n.gpus_free() for n in cluster.nodes if n.alive),
+                      reverse=True)
+        world = 0
+        for _ in range(upper):
+            for i, f in enumerate(free):
+                if f >= gpus_each:
+                    free[i] -= gpus_each
+                    world += 1
+                    break
+            else:
+                break
+        return world
+
+    # gang admission used by the Guardian before creating learner pods
+    def admit_gang(self, cluster: Cluster, tenant: str, n_pods: int,
+                   gpus_each: int) -> None:
+        """All-or-nothing: quota + capacity for every learner, atomically."""
+        self.tenancy.reserve(tenant, n_pods * gpus_each)     # raises on quota
+        free = sorted((n.gpus_free() for n in cluster.nodes if n.alive),
+                      reverse=True)
+        need = [gpus_each] * n_pods
+        for g in need:                      # first-fit-decreasing feasibility
+            for i, f in enumerate(free):
+                if f >= g:
+                    free[i] -= g
+                    break
+            else:
+                self.tenancy.release(tenant, n_pods * gpus_each)
+                raise Unschedulable(
+                    f"gang of {n_pods}×{gpus_each} GPUs does not fit")
+
+    def release_gang(self, tenant: str, n_pods: int, gpus_each: int) -> None:
+        self.tenancy.release(tenant, n_pods * gpus_each)

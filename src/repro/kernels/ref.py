@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels (naive, obviously-correct)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, group: int, scale: float, causal: bool = True,
+                  window: int = 0, logit_cap: float = 0.0) -> jax.Array:
+    """q (BH,Sq,hd), k/v (BK,Sk,hd) — full masked softmax attention."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    kq = jnp.repeat(k, group, axis=0)            # expand kv heads to q heads
+    vq = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) * scale
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    pq = jnp.arange(Sq)[:, None]
+    pk = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= pk <= pq
+    if window:
+        mask &= pq - pk < window
+    s = jnp.where(mask, s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, vq.astype(jnp.float32)).astype(q.dtype)
+
+
+def rglru_ref(log_a, b, h0) -> jax.Array:
+    """Step-by-step linear recurrence. log_a/b (B,S,R), h0 (B,R)."""
+    def step(h, xs):
+        la, bt = xs
+        h = jnp.exp(la) * h + bt
+        return h, h
+    _, hs = jax.lax.scan(step, h0, (log_a.transpose(1, 0, 2),
+                                    b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)
+
+
+def wkv6_ref(r, k, v, lw, u, s0):
+    """Step-by-step WKV6.  r/k/v/lw (BH,S,N), u (BH,1,N), s0 (BH,N,N)."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    uf = u.astype(jnp.float32)[:, 0]             # (BH, N)
+
+    def step(s, xs):
+        rt, kt, vt, lwt = xs                     # (BH, N) each
+        at = kt[:, :, None] * vt[:, None, :]     # (BH, N, N)
+        o = jnp.einsum("bc,bcv->bv", rt, s + uf[:, :, None] * at)
+        s = jnp.exp(lwt)[:, :, None] * s + at
+        return s, o
+
+    s_fin, os = jax.lax.scan(
+        step, s0.astype(jnp.float32),
+        (rf.transpose(1, 0, 2), kf.transpose(1, 0, 2),
+         vf.transpose(1, 0, 2), lw.transpose(1, 0, 2)))
+    return os.transpose(1, 0, 2).astype(r.dtype), s_fin

@@ -1,0 +1,81 @@
+"""Serving driver: batched prefill + greedy decode for any registry arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.layers import Ctx
+from repro.models.model import init_cache
+from repro.models.params import init_params
+from repro.train.steps import make_decode_step, make_prefill_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--mesh", default="host", choices=["host", "prod", "multipod"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = {"host": make_host_mesh,
+            "prod": make_production_mesh,
+            "multipod": lambda: make_production_mesh(multi_pod=True)}[args.mesh]()
+    ctx = Ctx(mesh=mesh, dtype=jnp.float32 if args.reduced else jnp.bfloat16)
+    params = init_params(cfg, jax.random.key(args.seed))
+
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_len = P + G
+    prompts = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab_size)
+    batch = {"tokens": prompts}
+    src_len = 0
+    if cfg.is_encoder_decoder:
+        src_len = max(P // 4, 16)
+        batch["src_embeds"] = 0.02 * jax.random.normal(
+            jax.random.key(2), (B, src_len, cfg.d_model))
+
+    prefill = jax.jit(make_prefill_step(cfg, ctx))
+    decode = jax.jit(make_decode_step(cfg, ctx), donate_argnums=(2,))
+
+    cache = init_cache(cfg, B, max_len, src_len=src_len)
+    t0 = time.time()
+    logits, cache = prefill(params, batch, cache)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    t_prefill = time.time() - t0
+
+    out = [tok]
+    t0 = time.time()
+    for t in range(P, P + G - 1):
+        logits, cache = decode(params, {"tokens": tok}, cache, jnp.int32(t))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = jnp.concatenate(out, axis=1)
+    print(f"[serve] arch={cfg.name} batch={B} prompt={P} gen={G}")
+    print(f"  prefill: {t_prefill*1e3:.1f} ms "
+          f"({B*P/t_prefill:.0f} tok/s incl. compile)")
+    print(f"  decode:  {t_decode*1e3:.1f} ms "
+          f"({B*(G-1)/max(t_decode,1e-9):.0f} tok/s incl. compile)")
+    print(f"  sample continuations: {gen[:2, :10].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

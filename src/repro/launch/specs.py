@@ -1,0 +1,124 @@
+"""ShapeDtypeStruct input specs + sharding trees for every (arch × shape).
+
+``input_specs`` mirrors what the data pipeline / serving frontend would
+feed: weak-type-correct stand-ins, no device allocation.  Modality
+frontends are stubs per the brief — audio/vision entries get precomputed
+frame/patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.sharding import ShardingRules, DEFAULT_RULES, make_named_sharding
+from repro.models import params as MP
+from repro.models.model import abstract_cache
+
+Tree = Dict[str, Any]
+
+
+def src_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    """Encoder-side length for enc-dec archs (audio frames stub)."""
+    return max(seq_len // 4, 16) if cfg.is_encoder_decoder else 0
+
+
+def text_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    """Token count fed to the decoder; vision archs reserve frontend slots
+    so the total decoder sequence is exactly ``seq_len``."""
+    if cfg.frontend == "vision" and cfg.frontend_tokens:
+        return seq_len - cfg.frontend_tokens
+    return seq_len
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, kind: str) -> Tree:
+    """ShapeDtypeStructs for the step's data inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    tl = text_len_for(cfg, S)
+    i32 = jnp.int32
+    if kind == "train":
+        specs: Tree = {
+            "tokens": jax.ShapeDtypeStruct((B, tl), i32),
+            "labels": jax.ShapeDtypeStruct((B, tl), i32),
+        }
+    elif kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, tl), i32)}
+    else:  # decode
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.is_encoder_decoder and kind != "decode":
+        specs["src_embeds"] = jax.ShapeDtypeStruct(
+            (B, src_len_for(cfg, S), cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "vision" and kind != "decode":
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def batch_shardings(batch_spec: Tree, mesh: Mesh,
+                    rules: ShardingRules = DEFAULT_RULES) -> Tree:
+    def sh(s: jax.ShapeDtypeStruct):
+        axes = ("batch",) + (None,) * (len(s.shape) - 1)
+        return make_named_sharding(axes, s.shape, mesh, rules)
+    return jax.tree.map(sh, batch_spec)
+
+
+def param_specs(cfg: ModelConfig, serve: bool = False) -> Tree:
+    """``serve=True``: matrices are stored bf16 (no optimizer → no master
+    copy; halves both HBM residency and FSDP-gather wire bytes)."""
+    specs = MP.shape_dtype_tree(MP.abstract_params(cfg))
+    if serve:
+        specs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+            if len(s.shape) >= 2 and s.dtype == jnp.float32 else s, specs)
+    return specs
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh,
+                    rules: ShardingRules = DEFAULT_RULES) -> Tree:
+    from repro.dist.sharding import tree_shardings
+    return tree_shardings(MP.abstract_params(cfg), mesh, rules)
+
+
+def state_specs(cfg: ModelConfig, run=None) -> Tree:
+    """Train-state ShapeDtypeStructs (m/v mirror the params)."""
+    from repro.configs.base import RunConfig
+    run = run or RunConfig()
+    ps = param_specs(cfg)
+    master = lambda s: jax.ShapeDtypeStruct(
+        s.shape, jnp.dtype(run.master_dtype) if len(s.shape) >= 2 else s.dtype)
+    od = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(run.opt_dtype))
+    ps_m = jax.tree.map(master, ps)
+    return {
+        "params": ps_m,
+        "opt": {"m": jax.tree.map(od, ps), "v": jax.tree.map(od, ps),
+                "count": jax.ShapeDtypeStruct((), jnp.int32)},
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh,
+                    rules: ShardingRules = DEFAULT_RULES) -> Tree:
+    psh = param_shardings(cfg, mesh, rules)
+    rep = NamedSharding(mesh, P())
+    return {
+        "params": psh,
+        "opt": {"m": psh, "v": psh, "count": rep},
+        "step": rep,
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tree:
+    B, S = shape.global_batch, shape.seq_len
+    ab = abstract_cache(cfg, B, S, src_len=src_len_for(cfg, S))
+    return MP.shape_dtype_tree(ab)
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    rules: ShardingRules = DEFAULT_RULES) -> Tree:
+    from repro.dist.sharding import tree_shardings
+    B, S = shape.global_batch, shape.seq_len
+    ab = abstract_cache(cfg, B, S, src_len=src_len_for(cfg, S))
+    return tree_shardings(ab, mesh, rules)

@@ -1,0 +1,11 @@
+from repro.models.params import (  # noqa: F401
+    ParamAb,
+    abstract_params,
+    init_params,
+    count_params,
+)
+from repro.models.model import (  # noqa: F401
+    forward,
+    init_cache,
+    abstract_cache,
+)

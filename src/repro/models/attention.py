@@ -1,0 +1,366 @@
+"""Attention: GQA (global / sliding-window) and DeepSeek-V2 MLA.
+
+Two execution modes:
+
+* ``full``   — train and prefill.  Flash-style **kv-chunked online-softmax**
+  (never materializes the (S, S) score matrix; block sizes from Ctx).  The
+  same math as ``kernels/flash_attention`` — the Pallas kernel replaces it
+  when ``ctx.use_pallas`` on TPU.
+* ``decode`` — one new token against a cache.  Global attention uses a
+  positionally-indexed cache; local attention a ring buffer of ``window``
+  slots; MLA uses the **latent cache + weight absorption** (the memory win
+  that motivates MLA — expanding per-head K/V for 32k cached tokens would be
+  O(S·H·hd)).
+
+Keys are RoPE-rotated at *write* time, so cached keys never re-rotate.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LOCAL_ATTN, ModelConfig
+from repro.models.layers import Ctx, apply_rope, rms_norm, softcap
+
+Cache = Dict[str, jax.Array]
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Core: blocked online-softmax attention (full mode)
+# ---------------------------------------------------------------------------
+def flash_attention_jnp(
+    q: jax.Array,          # (B, Sq, H, hd)   positions 0..Sq-1
+    k: jax.Array,          # (B, Sk, K, hd)   positions 0..Sk-1
+    v: jax.Array,          # (B, Sk, K, vd)
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,       # 0 = unlimited
+    logit_cap: float = 0.0,
+    q_block: int = 1024,
+    kv_block: int = 1024,
+) -> jax.Array:
+    """Blocked flash attention with *static* block skipping.
+
+    Positions are arange on both sides (full/prefill self-attention; for
+    non-causal cross-attention every block is live).  The (q, kv) block loop
+    is a python double loop, NOT lax.scan, intentionally:
+
+    * blocks dead under the causal/window mask are skipped at trace time —
+      causal costs ~S²/2, sliding-window costs O(S·W) instead of O(S²);
+    * XLA's cost model counts while-bodies once; inline blocks keep the
+      dry-run roofline FLOPs exact.
+
+    This mirrors the grid of kernels/flash_attention.  fp32 accumulation.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    vd = v.shape[-1]
+    qg = q.reshape(B, Sq, K, G, hd).astype(jnp.float32) * scale
+
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    outs = []
+    for q0 in range(0, Sq, q_block):
+        q1 = min(q0 + q_block, Sq)
+        nq = q1 - q0
+        m = jnp.full((B, nq, K, G), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, nq, K, G), jnp.float32)
+        acc = jnp.zeros((B, nq, K, G, vd), jnp.float32)
+        qc = qg[:, q0:q1]
+        for t0 in range(0, Sk, kv_block):
+            t1 = min(t0 + kv_block, Sk)
+            if causal and t0 > q1 - 1:
+                continue                       # entirely in the future
+            if window and t1 - 1 < q0 - window + 1:
+                continue                       # entirely before the window
+            kc = k[:, t0:t1].astype(jnp.float32)
+            vc = v[:, t0:t1].astype(jnp.float32)
+            s = jnp.einsum("bskgd,btkd->bskgt", qc, kc)
+            s = softcap(s, logit_cap)
+            need_mask = (causal and t1 - 1 > q0) or \
+                        (window and t0 < q1 - 1 - window + 1)
+            if need_mask:
+                pq = q0 + jnp.arange(nq)
+                pk = t0 + jnp.arange(t1 - t0)
+                valid = jnp.ones((nq, t1 - t0), bool)
+                if causal:
+                    valid &= pk[None, :] <= pq[:, None]
+                if window:
+                    valid &= pq[:, None] - pk[None, :] < window
+                s = jnp.where(valid[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bskgt,btkd->bskgd", p, vc)
+            m = m_new
+        outs.append(acc / jnp.maximum(l, 1e-37)[..., None])
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out.reshape(B, Sq, H, vd).astype(q.dtype)
+
+
+def decode_attention_jnp(
+    q: jax.Array,          # (B, 1, H, hd)
+    k: jax.Array,          # (B, K, Skv, hd)  cache layout, already rotated
+    v: jax.Array,          # (B, K, Skv, vd)
+    pos_k: jax.Array,      # (Skv,) absolute positions; -1 = invalid slot
+    pos_q: jax.Array,      # scalar
+    *,
+    scale: float,
+    window: int = 0,
+    logit_cap: float = 0.0,
+) -> jax.Array:
+    B, _, H, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    vd = v.shape[-1]
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bktd->bkgt", qg, k.astype(jnp.float32))
+    s = softcap(s, logit_cap)
+    valid = (pos_k >= 0) & (pos_k <= pos_q)
+    if window:
+        valid = valid & (pos_q - pos_k < window)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, vd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+def _attn_scale(cfg: ModelConfig) -> float:
+    if cfg.query_pre_attn_scalar > 0:
+        return cfg.query_pre_attn_scalar ** -0.5
+    return cfg.head_dim ** -0.5
+
+
+def gqa_attention(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    ctx: Ctx,
+    *,
+    kind: str,
+    mode: str,                      # full | decode
+    cache: Optional[Cache],
+    pos: jax.Array,                 # full: (S,) positions; decode: scalar
+    cross_kv: Optional[jax.Array] = None,   # encoder output for cross-attn
+    is_cross: bool = False,
+    causal: bool = True,
+) -> Tuple[jax.Array, Optional[Cache]]:
+    B = x.shape[0]
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    window = cfg.window_size if kind == LOCAL_ATTN else 0
+    scale = _attn_scale(cfg)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["q"].astype(x.dtype))
+    if "qb" in p:
+        q = q + p["qb"].astype(q.dtype)
+
+    is_cross = is_cross or cross_kv is not None
+    kv_src = cross_kv if cross_kv is not None else x
+    if mode == "decode" and is_cross and cache is not None:
+        # encoder K/V precomputed at prefill; cache layout (B, K, S, hd)
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", kv_src, p["k"].astype(kv_src.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", kv_src, p["v"].astype(kv_src.dtype))
+        if "kb" in p:
+            k = k + p["kb"].astype(k.dtype)
+            v = v + p["vb"].astype(v.dtype)
+        new_cache = None
+
+    fresh_kv = not (mode == "decode" and is_cross and cache is not None)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        if fresh_kv:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if mode == "full":
+        q = ctx.constrain(q, ("batch", "seq", "heads", None))
+        if not is_cross:
+            k = apply_rope(k, pos, cfg.rope_theta)
+        q = apply_rope(q, pos, cfg.rope_theta) if not is_cross else q
+        if is_cross:
+            out = flash_attention_jnp(
+                q, k, v, scale=scale, causal=False,
+                logit_cap=cfg.attn_logit_softcap,
+                q_block=ctx.attn_q_block, kv_block=ctx.attn_kv_block)
+            if cache is not None:       # prefill: stash encoder K/V
+                new_cache = {"k": k.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
+                             "v": v.transpose(0, 2, 1, 3).astype(cache["v"].dtype)}
+        else:
+            S = q.shape[1]
+            if ctx.use_pallas and S % 128 == 0:
+                from repro.kernels.ops import flash_attention_bshd
+                out = flash_attention_bshd(
+                    q, k, v, scale=scale, causal=causal, window=window,
+                    logit_cap=cfg.attn_logit_softcap)
+            else:
+                out = flash_attention_jnp(
+                    q, k, v, scale=scale, causal=causal, window=window,
+                    logit_cap=cfg.attn_logit_softcap,
+                    q_block=ctx.attn_q_block, kv_block=ctx.attn_kv_block)
+            if cache is not None:       # prefill: write the kv cache
+                new_cache = _write_full_kv(cache, k, v, pos, window)
+    else:  # decode, self-attention
+        q = apply_rope(q, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
+        if not is_cross:
+            k = apply_rope(k, jnp.reshape(pos, (1,)), cfg.rope_theta)
+            new_cache, k_all, v_all, pos_all = _update_decode_kv(
+                cache, k, v, pos, window)
+            out = decode_attention_jnp(
+                q, k_all, v_all, pos_all, pos, scale=scale, window=window,
+                logit_cap=cfg.attn_logit_softcap)
+        else:
+            if fresh_kv:   # cross-attn decode without a prefilled cache
+                k = k.transpose(0, 2, 1, 3)
+                v = v.transpose(0, 2, 1, 3)
+            pos_k = jnp.arange(k.shape[2], dtype=jnp.int32)
+            out = decode_attention_jnp(
+                q, k, v, pos_k, jnp.asarray(2**30, jnp.int32), scale=scale,
+                logit_cap=cfg.attn_logit_softcap)
+            new_cache = cache
+
+    out = ctx.constrain(out, ("batch", "seq", "heads", None))
+    return jnp.einsum("bshk,hkd->bsd", out, p["o"].astype(out.dtype)), new_cache
+
+
+def _write_full_kv(cache: Cache, k, v, pos, window: int) -> Cache:
+    """Prefill: write rotated K/V into the cache buffer.
+
+    Cache layout (B, K, S_max, hd).  Global cache is position-indexed; local
+    cache keeps a ring of ``window`` slots — slot = pos % window."""
+    S_max = cache["k"].shape[2]
+    k = k.transpose(0, 2, 1, 3)      # (B,S,K,hd) -> (B,K,S,hd)
+    v = v.transpose(0, 2, 1, 3)
+    if window and S_max == window:
+        # ring buffer: only the last `window` positions survive; slicing to
+        # them first makes the scatter indices unique (well-defined).
+        k, v, pos = k[:, :, -window:], v[:, :, -window:], pos[-window:]
+        slots = pos % window
+        ck = cache["k"].at[:, :, slots].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[:, :, slots].set(v.astype(cache["v"].dtype))
+        cp = cache["pos"].at[slots].set(pos.astype(jnp.int32))
+        return {"k": ck, "v": cv, "pos": cp}
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), pos[0], axis=2)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), pos[0], axis=2)
+    cp = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], pos.astype(jnp.int32), pos[0], axis=0)
+    return {"k": ck, "v": cv, "pos": cp}
+
+
+def _update_decode_kv(cache: Cache, k, v, pos, window: int):
+    """Insert one token's K/V; return (new_cache, k_all, v_all, pos_all).
+    ``k, v`` arrive as (B, 1, K, hd); cache layout is (B, K, S, hd)."""
+    slot = (pos % window) if window and cache["k"].shape[2] == window else pos
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
+    cp = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.reshape(pos, (1,)).astype(jnp.int32), slot, axis=0)
+    return {"k": ck, "v": cv, "pos": cp}, ck, cv, cp
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+def _mla_q(cfg: ModelConfig, p, x, pos) -> Tuple[jax.Array, jax.Array]:
+    """Returns (q_nope (B,S,H,nope), q_rope (B,S,H,rd)) — rope applied."""
+    nope, rd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        qa = rms_norm(x @ p["q_a"], p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsl,lhk->bshk", qa, p["q_b"].astype(qa.dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["q"].astype(x.dtype))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    ctx: Ctx,
+    *,
+    mode: str,
+    cache: Optional[Cache],
+    pos: jax.Array,
+) -> Tuple[jax.Array, Optional[Cache]]:
+    B = x.shape[0]
+    H = cfg.num_heads
+    nope, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lora = cfg.kv_lora_rank
+    scale = (nope + rd) ** -0.5
+    kv_b = p["kv_b"]                                      # (lora, H, nope+vd)
+
+    kv_a = x @ p["kv_a"]                                  # (B,S,lora+rd)
+    ckv = rms_norm(kv_a[..., :lora], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., None, lora:]                       # (B,S,1,rd) shared head
+
+    if mode == "full":
+        q_nope, q_rope = _mla_q(cfg, p, x, pos)
+        k_rope = apply_rope(k_rope, pos, cfg.rope_theta)
+        kv = jnp.einsum("bsl,lhe->bshe", ckv, kv_b.astype(ckv.dtype))  # expand
+        k_nope, v = kv[..., :nope], kv[..., nope:]
+        # fold the shared rope head into per-head keys
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (*k_rope.shape[:2], H, rd))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        q = ctx.constrain(q, ("batch", "seq", "heads", None))
+        out = flash_attention_jnp(
+            q, k, v, scale=scale, causal=True,
+            q_block=ctx.attn_q_block, kv_block=ctx.attn_kv_block)
+        new_cache = None
+        if cache is not None:
+            c = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), pos[0], axis=1)
+            r = jax.lax.dynamic_update_slice_in_dim(
+                cache["krope"], k_rope[:, :, 0].astype(cache["krope"].dtype),
+                pos[0], axis=1)
+            cp = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], pos.astype(jnp.int32), pos[0], axis=0)
+            new_cache = {"ckv": c, "krope": r, "pos": cp}
+    else:
+        # ---- decode with weight absorption: score and read in latent space
+        q_nope, q_rope = _mla_q(cfg, p, x, pos[None] if pos.ndim == 0 else pos)
+        k_rope = apply_rope(k_rope, jnp.reshape(pos, (1,)), cfg.rope_theta)
+        c_new = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), pos, axis=1)
+        r_new = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope[:, :, 0].astype(cache["krope"].dtype),
+            pos, axis=1)
+        cp = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.reshape(pos, (1,)).astype(jnp.int32), pos, axis=0)
+        new_cache = {"ckv": c_new, "krope": r_new, "pos": cp}
+
+        w_kc = kv_b[..., :nope]                            # (lora,H,nope)
+        w_vc = kv_b[..., nope:]                            # (lora,H,vd)
+        q_eff = jnp.einsum("bshe,lhe->bshl", q_nope, w_kc)  # absorb W_kc
+        s = jnp.einsum("bshl,btl->bsht", q_eff.astype(jnp.float32),
+                       c_new.astype(jnp.float32))
+        s = s + jnp.einsum("bshr,btr->bsht", q_rope.astype(jnp.float32),
+                           r_new.astype(jnp.float32))
+        s = s * scale
+        valid = (cp >= 0) & (cp <= pos)
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        ctx_lat = jnp.einsum("bsht,btl->bshl", pr, c_new.astype(jnp.float32))
+        out = jnp.einsum("bshl,lhe->bshe", ctx_lat.astype(x.dtype),
+                         w_vc.astype(x.dtype))
+
+    out = ctx.constrain(out, ("batch", "seq", "heads", None))
+    return jnp.einsum("bshe,hed->bsd", out, p["o"].astype(out.dtype)), new_cache

@@ -1,0 +1,446 @@
+"""Model assembly: embedding → scanned block stacks → logits.
+
+One substrate serves all 10 assigned architectures; the per-layer *block
+pattern* (global/local attention, RG-LRU, RWKV) plus feature flags (MLA, MoE,
+enc-dec, frontend stubs) come from :class:`ModelConfig`.
+
+Layer stacks are grouped for ``jax.lax.scan`` (compile-time & HLO size):
+``num_layers`` = prefix (unrolled, e.g. DeepSeek first-k-dense) + n_groups ×
+pattern (scanned, stacked weights) + tail (unrolled remainder).  KV caches
+carry a matching leading group dim and are threaded through the scan as xs/ys.
+
+Modes
+-----
+* ``train``   — tokens → logits for every position (loss in repro.train).
+* ``prefill`` — tokens → last-position logits + a filled cache.
+* ``decode``  — one token + cache + pos → next logits + updated cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    GLOBAL_ATTN,
+    LOCAL_ATTN,
+    RECURRENT,
+    RWKV,
+    ModelConfig,
+)
+from repro.models import params as P
+from repro.models.attention import gqa_attention, mla_attention
+from repro.models.layers import Ctx, dense_ffn, rms_norm
+from repro.models.moe import moe_ffn
+from repro.models.recurrent import rglru_block
+from repro.models.rwkv import rwkv_channel_mix, rwkv_time_mix
+
+Tree = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+def apply_block(
+    cfg: ModelConfig,
+    kind: str,
+    p: Tree,
+    h: jax.Array,
+    ctx: Ctx,
+    *,
+    mode: str,
+    cache: Optional[Tree],
+    pos: jax.Array,
+    enc_out: Optional[jax.Array] = None,
+    dense_only: bool = False,
+    causal: bool = True,
+) -> Tuple[jax.Array, Optional[Tree], jax.Array]:
+    """Residual block: temporal mixer + (cross-attn) + channel mixer.
+
+    Returns (h, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Tree = {} if cache is not None else None
+    full_mode = mode != "decode"
+    amode = "full" if full_mode else "decode"
+
+    def _post(name, y):
+        return rms_norm(y, p[name], cfg.norm_eps) if name in p else y
+
+    # ---- temporal mixer ---------------------------------------------------
+    # With sequence-parallel residuals, gather ONCE at the norm output (the
+    # Megatron-SP transition point) instead of per consuming matmul.
+    x = ctx.constrain(rms_norm(h, p["pre_norm"], cfg.norm_eps),
+                      ("batch", "seq", "embed_act"))
+    if kind in (GLOBAL_ATTN, LOCAL_ATTN):
+        sub = cache.get("attn") if cache is not None else None
+        if cfg.use_mla:
+            y, nc = mla_attention(cfg, p["attn"], x, ctx, mode=amode,
+                                  cache=sub, pos=pos)
+        else:
+            y, nc = gqa_attention(cfg, p["attn"], x, ctx, kind=kind,
+                                  mode=amode, cache=sub, pos=pos,
+                                  causal=causal)
+        if new_cache is not None:
+            new_cache["attn"] = nc
+    elif kind == RECURRENT:
+        sub = cache.get("rec") if cache is not None else None
+        y, nc = rglru_block(cfg, p["rec"], x, ctx, mode=amode, cache=sub)
+        if new_cache is not None:
+            new_cache["rec"] = nc
+    elif kind == RWKV:
+        sub = cache.get("rwkv") if cache is not None else None
+        y, nc = rwkv_time_mix(cfg, p["tm"], x, ctx, mode=amode, cache=sub)
+        if new_cache is not None:
+            new_cache["rwkv"] = nc
+    else:
+        raise ValueError(kind)
+    # Constrain the mixer output to the sharded-residual layout BEFORE the
+    # add: the TP output all-reduce then lowers to the cheaper
+    # reduce-scatter (Megatron-SP's AR = AG + RS split).
+    y = ctx.constrain(y, ("batch", "resid_seq", "embed_act"))
+    h = h + _post("post_norm", y)
+    h = ctx.constrain(h, ("batch", "resid_seq", "embed_act"))
+
+    # ---- cross attention (enc-dec decoder) --------------------------------
+    # full mode needs enc_out; decode reads the cached encoder K/V instead
+    if "cross" in p and (enc_out is not None or
+                         (cache is not None and "cross" in cache)):
+        x = ctx.constrain(rms_norm(h, p["cross_norm"], cfg.norm_eps),
+                          ("batch", "seq", "embed_act"))
+        sub = cache.get("cross") if cache is not None else None
+        y, nc = gqa_attention(cfg, p["cross"], x, ctx, kind=GLOBAL_ATTN,
+                              mode=amode, cache=sub, pos=pos,
+                              cross_kv=enc_out, is_cross=True, causal=False)
+        if new_cache is not None:
+            new_cache["cross"] = nc
+        y = ctx.constrain(y, ("batch", "resid_seq", "embed_act"))
+        h = h + _post("post_cross_norm", y)
+
+    # ---- channel mixer ----------------------------------------------------
+    if kind == RWKV:
+        x = ctx.constrain(rms_norm(h, p["cm_norm"], cfg.norm_eps),
+                          ("batch", "seq", "embed_act"))
+        sub = new_cache.get("rwkv") if new_cache is not None else None
+        y, nc = rwkv_channel_mix(cfg, p["cm"], x, ctx, mode=amode, cache=sub)
+        if new_cache is not None:
+            new_cache["rwkv"] = nc
+    else:
+        x = ctx.constrain(rms_norm(h, p["ffn_norm"], cfg.norm_eps),
+                          ("batch", "seq", "embed_act"))
+        if "moe" in p and not dense_only:
+            y, aux = moe_ffn(cfg, p["moe"], x, ctx)
+        else:
+            y = dense_ffn(p["ffn"], x, cfg.act, ctx)
+    y = ctx.constrain(y, ("batch", "resid_seq", "embed_act"))
+    h = h + _post("post_ffn_norm", y)
+    h = ctx.constrain(h, ("batch", "resid_seq", "embed_act"))
+    return h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(policy)
+
+
+def run_stack(
+    cfg: ModelConfig,
+    stack: Tree,                    # {"prefix": .., "groups": .., "tail": ..}
+    h: jax.Array,
+    ctx: Ctx,
+    *,
+    mode: str,
+    cache: Optional[Tree],
+    pos: jax.Array,
+    enc_out: Optional[jax.Array] = None,
+    causal: bool = True,
+    stack_name: str = "decoder",
+    remat_policy: str = "none",
+) -> Tuple[jax.Array, Optional[Tree], jax.Array]:
+    pat = cfg.block_pattern
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: Tree = {} if cache is not None else None
+
+    def run_layer(i_kind, p, h, c):
+        return apply_block(cfg, i_kind, p, h, ctx, mode=mode, cache=c,
+                           pos=pos, enc_out=enc_out, causal=causal,
+                           dense_only=False)
+
+    # ---- prefix (first-k-dense, unrolled) ---------------------------------
+    if "prefix" in stack:
+        sub_nc = {}
+        for i in sorted(stack["prefix"], key=int):
+            kind = cfg.layer_kinds()[int(i)]
+            c = cache["prefix"][i] if cache is not None else None
+            h, nc, aux = apply_block(cfg, kind, stack["prefix"][i], h, ctx,
+                                     mode=mode, cache=c, pos=pos,
+                                     enc_out=enc_out, causal=causal,
+                                     dense_only=True)
+            aux_total = aux_total + aux
+            sub_nc[i] = nc
+        if new_cache is not None:
+            new_cache["prefix"] = sub_nc
+
+    # ---- scanned groups ----------------------------------------------------
+    if "groups" in stack:
+        gcache = cache["groups"] if cache is not None else None
+        # Optionally re-constrain the per-iteration weight slices to their
+        # FSDP/TP shardings.  Hypothesis (perf log #A0): prevents XLA from
+        # hoisting the data-axis all-gather out of the loop.  MEASURED:
+        # no memory change on mistral-large train (58.6 -> 59.7 GB), i.e.
+        # refuted — XLA already keeps the gather in-loop; the stacks were
+        # CPU float-normalization artifacts.  Kept behind a flag, off by
+        # default.
+        group_axes = None
+        if ctx.mesh is not None and ctx.constrain_scan_weights:
+            from repro.models import params as _P
+            ab = _P.abstract_params(cfg)
+            ab_groups = ab.get(stack_name, {}).get("groups")
+            if ab_groups is not None:
+                group_axes = jax.tree.map(
+                    lambda a: a.logical_axes[1:], ab_groups,
+                    is_leaf=lambda x: isinstance(x, _P.ParamAb))
+
+        def body(carry, xs):
+            h, aux = carry
+            gp, gc = xs
+            if group_axes is not None:
+                gp = jax.tree.map(lambda w, ax: ctx.constrain(w, ax),
+                                  gp, group_axes)
+            nc_out = {} if gc is not None else None
+            for j, kind in enumerate(pat):
+                c = gc[str(j)] if gc is not None else None
+                h, nc, a = run_layer(kind, gp[str(j)], h, c)
+                aux = aux + a
+                if nc_out is not None:
+                    nc_out[str(j)] = nc
+            return (h, aux), nc_out
+
+        body = _remat(body, remat_policy)
+        (h, aux_total), g_nc = jax.lax.scan(
+            body, (h, aux_total), (stack["groups"], gcache),
+            unroll=True if ctx.scan_unroll else 1)
+        if new_cache is not None:
+            new_cache["groups"] = g_nc
+
+    # ---- tail (unrolled remainder) -----------------------------------------
+    if "tail" in stack:
+        sub_nc = {}
+        for i in sorted(stack["tail"], key=int):
+            kind = pat[int(i)]
+            c = cache["tail"][i] if cache is not None else None
+            h, nc, aux = run_layer(kind, stack["tail"][i], h, c)
+            aux_total = aux_total + aux
+            sub_nc[i] = nc
+        if new_cache is not None:
+            new_cache["tail"] = sub_nc
+
+    return h, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Whole model
+# ---------------------------------------------------------------------------
+def cast_params(params: Tree, dtype) -> Tree:
+    """Mixed precision: matrices (ndim≥2) compute in ``dtype`` (bf16 on TPU);
+    1-D leaves (norm gains, biases, Λ) stay fp32.  Master params remain fp32
+    in the train state — this cast happens inside the jitted forward."""
+    def c(p):
+        if p.ndim >= 2 and p.dtype == jnp.float32:
+            return p.astype(dtype)
+        return p
+    return jax.tree.map(c, params)
+
+
+def _embed(cfg: ModelConfig, params: Tree, tokens: jax.Array, ctx: Ctx) -> jax.Array:
+    h = jnp.take(params["embed"], tokens, axis=0).astype(ctx.dtype)
+    if cfg.embed_scale_by_sqrt_dim:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, ctx.dtype)
+    return ctx.constrain(h, ("batch", "seq", "embed_act"))
+
+
+def _unembed(cfg: ModelConfig, params: Tree, h: jax.Array, ctx: Ctx) -> jax.Array:
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (h @ table.astype(h.dtype)).astype(jnp.float32)
+    logits = ctx.constrain(logits, ("batch", "seq", "vocab_act"))
+    from repro.models.layers import softcap as _sc
+    logits = _sc(logits, cfg.final_logit_softcap)
+    # mask vocab-padding ids
+    pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    return jnp.where(pad_mask, logits, -1e9)
+
+
+def _encoder_out(cfg: ModelConfig, params: Tree, src_embeds: jax.Array,
+                 ctx: Ctx, remat_policy: str) -> jax.Array:
+    """Encoder stack over precomputed (stub) frontend embeddings."""
+    h = src_embeds.astype(ctx.dtype)
+    pos = jnp.arange(h.shape[1], dtype=jnp.int32)
+    h, _, _ = run_stack(cfg, params["encoder"], h, ctx, mode="train",
+                        cache=None, pos=pos, causal=False,
+                        stack_name="encoder", remat_policy=remat_policy)
+    return rms_norm(h, params["encoder_norm"], cfg.norm_eps)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Tree,
+    batch: Tree,
+    ctx: Ctx,
+    *,
+    mode: str = "train",             # train | prefill | decode
+    cache: Optional[Tree] = None,
+    pos: Optional[jax.Array] = None, # decode: scalar position
+    remat_policy: str = "none",
+) -> Tuple[jax.Array, Optional[Tree], jax.Array]:
+    """Returns (logits, new_cache, aux_loss).
+
+    train:   logits (B, S, V) for every position
+    prefill: logits (B, 1, V) for the last position + filled cache
+    decode:  logits (B, 1, V) + updated cache
+    """
+    params = cast_params(params, ctx.dtype)
+    tokens = batch["tokens"]
+    enc_out = None
+    # decode reuses the cross K/V cached at prefill — no encoder re-run
+    if cfg.is_encoder_decoder and mode != "decode":
+        enc_out = _encoder_out(cfg, params, batch["src_embeds"], ctx,
+                               remat_policy)
+
+    h = _embed(cfg, params, tokens, ctx)
+    n_front = 0
+    if cfg.frontend == "vision" and "frontend_embeds" in batch:
+        fe = batch["frontend_embeds"].astype(ctx.dtype)
+        n_front = fe.shape[1]
+        h = jnp.concatenate([fe, h], axis=1)
+
+    if mode == "decode":
+        assert pos is not None and cache is not None
+        p_arr = jnp.asarray(pos, jnp.int32)
+    else:
+        p_arr = jnp.arange(h.shape[1], dtype=jnp.int32)
+
+    h, new_cache, aux = run_stack(
+        cfg, params["decoder"], h, ctx, mode=mode, cache=cache, pos=p_arr,
+        enc_out=enc_out, causal=True, remat_policy=remat_policy)
+
+    if mode == "train":
+        if n_front:
+            h = h[:, n_front:]
+        logits = _unembed(cfg, params, h, ctx)
+    else:
+        logits = _unembed(cfg, params, h[:, -1:], ctx)
+    return logits, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+def _layer_cache_ab(cfg: ModelConfig, kind: str, B: int, S_max: int,
+                    src_len: int, cross: bool) -> Tree:
+    """Abstract cache (ParamAb reused as shape+axes carrier) for one layer."""
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    dt = cfg.dtype
+    c: Tree = {}
+    if kind in (GLOBAL_ATTN, LOCAL_ATTN):
+        if cfg.use_mla:
+            c["attn"] = {
+                "ckv": P.ParamAb((B, S_max, cfg.kv_lora_rank),
+                                 ("cache_batch", "kv_seq", "lora"), "zeros", dt),
+                "krope": P.ParamAb((B, S_max, cfg.qk_rope_head_dim),
+                                   ("cache_batch", "kv_seq", None), "zeros", dt),
+                "pos": P.ParamAb((S_max,), (None,), "zeros", "int32"),
+            }
+        else:
+            W = S_max if kind == GLOBAL_ATTN else min(cfg.window_size, S_max)
+            c["attn"] = {
+                "k": P.ParamAb((B, K, W, hd),
+                               ("cache_batch", "kv_heads", "kv_seq", "head_dim"),
+                               "zeros", dt),
+                "v": P.ParamAb((B, K, W, hd),
+                               ("cache_batch", "kv_heads", "kv_seq", "head_dim"),
+                               "zeros", dt),
+                "pos": P.ParamAb((W,), (None,), "zeros", "int32"),
+            }
+    elif kind == RECURRENT:
+        R, CW = cfg.rnn_width, cfg.conv1d_width
+        c["rec"] = {
+            "h": P.ParamAb((B, R), ("cache_batch", "rnn"), "zeros", "float32"),
+            "conv": P.ParamAb((B, CW - 1, R), ("cache_batch", None, "rnn"),
+                              "zeros", dt),
+        }
+    elif kind == RWKV:
+        N = cfg.rwkv_head_dim
+        H = cfg.d_model // N
+        c["rwkv"] = {
+            "s": P.ParamAb((B, H, N, N), ("cache_batch", "heads", None, None),
+                           "zeros", "float32"),
+            "shift_tm": P.ParamAb((B, cfg.d_model), ("cache_batch", None),
+                                  "zeros", dt),
+            "shift_cm": P.ParamAb((B, cfg.d_model), ("cache_batch", None),
+                                  "zeros", dt),
+        }
+    if cross:
+        c["cross"] = {
+            "k": P.ParamAb((B, K, src_len, hd),
+                           ("cache_batch", "kv_heads", "kv_seq", "head_dim"),
+                           "zeros", dt),
+            "v": P.ParamAb((B, K, src_len, hd),
+                           ("cache_batch", "kv_heads", "kv_seq", "head_dim"),
+                           "zeros", dt),
+        }
+    return c
+
+
+def abstract_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+                   src_len: int = 0) -> Tree:
+    """Abstract decode/prefill cache matching the decoder stack layout."""
+    kinds = cfg.layer_kinds()
+    pat = cfg.block_pattern
+    cross = cfg.is_encoder_decoder
+    prefix_n = cfg.first_k_dense
+    body = kinds[prefix_n:]
+    n_groups, tail_n = divmod(len(body), len(pat))
+    out: Tree = {}
+    if prefix_n:
+        out["prefix"] = {
+            str(i): _layer_cache_ab(cfg, kinds[i], batch_size, max_len,
+                                    src_len, cross)
+            for i in range(prefix_n)}
+    if n_groups:
+        group = {str(j): _layer_cache_ab(cfg, pat[j], batch_size, max_len,
+                                         src_len, cross)
+                 for j in range(len(pat))}
+        out["groups"] = P._stack(group, n_groups)
+    if tail_n:
+        out["tail"] = {
+            str(j): _layer_cache_ab(cfg, pat[j], batch_size, max_len,
+                                    src_len, cross)
+            for j in range(tail_n)}
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               src_len: int = 0) -> Tree:
+    ab = abstract_cache(cfg, batch_size, max_len, src_len)
+
+    def mk(leaf: P.ParamAb):
+        if leaf.dtype == "int32":       # position slots start invalid
+            return jnp.full(leaf.shape, -1, jnp.int32)
+        return jnp.zeros(leaf.shape, jnp.dtype(leaf.dtype))
+
+    return jax.tree.map(mk, ab, is_leaf=lambda x: isinstance(x, P.ParamAb))
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    return P.count_params(cfg, active_only=active_only)

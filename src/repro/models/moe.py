@@ -1,0 +1,83 @@
+"""Mixture-of-Experts FFN: capacity-based dispatch (GShard-style).
+
+Baseline dispatch is the one-hot-einsum formulation — it SPMD-partitions
+cleanly (XLA inserts the all-to-all-equivalent collectives when the expert
+dim of the dispatched activations is constrained to the ``model`` axis).
+Tokens are processed in groups so the (S, E, C) dispatch tensor stays small;
+capacity per group C = ceil(Sg * top_k / E * capacity_factor).
+
+Returns (out, aux_loss).  Aux loss is the standard load-balancing loss
+(Switch/GShard): E * Σ_e f_e · p_e over routed probability mass.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Ctx, activation
+
+MOE_GROUP_SIZE = 1024     # tokens per dispatch group
+
+
+def moe_ffn(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,                 # (B, S, D)
+    ctx: Ctx,
+) -> Tuple[jax.Array, jax.Array]:
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    Fe = cfg.moe_d_ff
+    T = B * S
+    Sg = min(cfg.moe_group_size or MOE_GROUP_SIZE, T)
+    assert T % Sg == 0, f"token count {T} not divisible by group size {Sg}"
+    G = T // Sg
+    C = max(1, int(Sg * k / E * cfg.capacity_factor))
+
+    xt = x.reshape(G, Sg, D)
+    logits = (xt @ p["router"]).astype(jnp.float32)        # (G,Sg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # --- top-k routing with per-expert capacity ---------------------------
+    topk_p, topk_e = jax.lax.top_k(probs, k)               # (G,Sg,k)
+    # DeepSeek-V2 normalizes the top-k weights to sum to 1
+    topk_p = topk_p / jnp.maximum(topk_p.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(topk_e, E, dtype=jnp.float32)  # (G,Sg,k,E)
+    # position of each (token, choice) within its expert queue, priority by
+    # token order then choice order (GShard convention)
+    flat = onehot.reshape(G, Sg * k, E)
+    pos_in_e = (jnp.cumsum(flat, axis=1) - flat).reshape(G, Sg, k, E)
+    pos = (pos_in_e * onehot).sum(-1)                      # (G,Sg,k)
+    keep = pos < C
+    gates = topk_p * keep
+
+    # dispatch/combine tensors (G, Sg, E, C)
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+    disp = jnp.einsum("gske,gskc->gsec", onehot, pos_oh)
+    comb = jnp.einsum("gsk,gske,gskc->gsec", gates, onehot, pos_oh)
+
+    dt = x.dtype
+    xd = jnp.einsum("gsd,gsec->gecd", xt, disp.astype(dt))  # (G,E,C,D)
+    xd = ctx.constrain(xd, ("batch", "experts", None, None))
+    h = activation(jnp.einsum("gecd,edf->gecf", xd, p["we_g"]), cfg.act) \
+        * jnp.einsum("gecd,edf->gecf", xd, p["we_u"])
+    h = ctx.constrain(h, ("batch", "experts", None, "expert_ffn"))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["we_d"])
+    ye = ctx.constrain(ye, ("batch", "experts", None, None))
+    out = jnp.einsum("gecd,gsec->gsd", ye, comb.astype(dt)).reshape(B, S, D)
+
+    # --- shared experts (always-on dense path) ----------------------------
+    if cfg.num_shared_experts:
+        hs = activation(x @ p["ws_g"], cfg.act) * (x @ p["ws_u"])
+        hs = ctx.constrain(hs, ("batch", "seq", "ffn"))
+        out = out + hs @ p["ws_d"]
+
+    # --- load-balancing aux loss ------------------------------------------
+    me = probs.mean(axis=(0, 1))                            # mean prob per e
+    ce = onehot.sum(2).mean(axis=(0, 1)) / k                # frac tokens per e
+    aux = E * jnp.sum(me * ce) * cfg.router_aux_loss_coef
+    return out, aux

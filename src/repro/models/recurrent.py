@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block:  x-branch = conv1d(W_x · u)  →  RG-LRU  ;  y-branch = GeLU(W_y · u)
+        out = W_o (y ⊙ RGLRU(x))
+
+RG-LRU (per channel):
+    r_t = σ(x_t W_r),  i_t = σ(x_t W_i)
+    a_t = exp(c · r_t · log σ(Λ))        (c = -8 as in Griffin §2.4)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+
+Full mode uses ``jax.lax.associative_scan`` over the affine maps
+(h → a·h + b), which is O(S log S) elementwise work and maps well onto TPU
+vector units; the Pallas kernel (kernels/rglru_scan) is a time-blocked
+sequential scan with the carry in VMEM.  Decode carries (h, conv window).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Ctx
+
+RGLRU_C = 8.0
+
+
+def rglru_gates(p, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(log_a, beta·x_gated): per-step decay (log-space) and input."""
+    r = jax.nn.sigmoid((x @ p["gate_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["gate_i"]).astype(jnp.float32))
+    log_lam = -jax.nn.softplus(-p["rglru_lambda"].astype(jnp.float32))  # log σ(Λ)
+    log_a = RGLRU_C * r * log_lam                          # (B,S,R), ≤ 0
+    a_sq = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a_sq, 1e-12)) * i * x.astype(jnp.float32)
+    return log_a, gated
+
+
+def rglru_scan_assoc(log_a: jax.Array, b: jax.Array,
+                     h0: Optional[jax.Array] = None) -> jax.Array:
+    """h_t = exp(log_a_t)·h_{t-1} + b_t via associative scan over dim 1."""
+    if h0 is not None:
+        # fold the incoming state into the first step's additive term
+        b = b.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+        log_a = log_a.at[:, 0].set(0.0)
+
+    def combine(l, r):
+        (la1, b1), (la2, b2) = l, r
+        return la1 + la2, b1 * jnp.exp(la2) + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h
+
+
+def conv1d_causal(p, x: jax.Array, state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over time.  ``state`` is the trailing
+    (CW-1)-step window from the previous segment (decode), zeros for full."""
+    CW = p["conv_w"].shape[0]
+    B, S, R = x.shape
+    if state is None:
+        state = jnp.zeros((B, CW - 1, R), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(CW):
+        out = out + xp[:, i:i + S] * p["conv_w"][i].astype(x.dtype)
+    out = out + p["conv_b"].astype(x.dtype)
+    new_state = xp[:, -(CW - 1):]
+    return out, new_state
+
+
+def rglru_block(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    u: jax.Array,                  # (B, S, D)
+    ctx: Ctx,
+    *,
+    mode: str,
+    cache: Optional[Dict[str, jax.Array]],
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    x = u @ p["wx"]                                        # (B,S,R)
+    x = ctx.constrain(x, ("batch", "seq", "rnn"))
+    y = jax.nn.gelu(u @ p["wy"], approximate=True)
+    y = ctx.constrain(y, ("batch", "seq", "rnn"))
+
+    conv_state = cache["conv"] if cache is not None and mode == "decode" else None
+    x, new_conv = conv1d_causal(p, x, conv_state)
+
+    log_a, b = rglru_gates(p, x)
+    if mode == "decode":
+        h_prev = cache["h"].astype(jnp.float32)
+        h = jnp.exp(log_a[:, 0]) * h_prev + b[:, 0]
+        h_seq = h[:, None]
+        new_cache = {"h": h.astype(cache["h"].dtype), "conv": new_conv}
+    else:
+        if ctx.use_pallas:
+            from repro.kernels.ops import rglru_scan_bsr
+            h_seq = rglru_scan_bsr(log_a, b)
+        else:
+            h_seq = rglru_scan_assoc(log_a, b)
+        new_cache = None
+        if cache is not None:   # prefill: expose final state
+            new_cache = {"h": h_seq[:, -1].astype(cache["h"].dtype),
+                         "conv": new_conv.astype(cache["conv"].dtype)}
+    h_seq = h_seq.astype(u.dtype)
+    out = (y * h_seq) @ p["wo"]
+    return out, new_cache

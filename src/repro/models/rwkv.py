@@ -1,0 +1,183 @@
+"""RWKV6 ("Finch") blocks: time-mix (WKV6) + channel-mix.
+
+WKV6 recurrence, per head (hd_k = hd_v = N, decay on the key channel):
+
+    o_t = r_t · S_{t-1}  +  (r_t · (u ⊙ k_t)) v_t
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ          w_t = exp(-exp(ww_t)) ∈ (0,1)
+
+Full mode runs the **chunked** formulation (scan over chunks of length
+``ctx.rwkv_chunk``): within a chunk all pairwise decays are products of
+per-step decays ≤ 1, computed in log space — every exp() argument is ≤ 0 so
+the math is numerically stable without rescaling tricks.  The Pallas kernel
+(kernels/rwkv6_wkv) implements the same chunking with the state in VMEM.
+
+Decay ``w``, state and within-chunk math are fp32 throughout.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Ctx
+
+
+def _token_shift(x: jax.Array, state: Optional[jax.Array]) -> jax.Array:
+    """shift(x)_t = x_{t-1}; position -1 comes from ``state`` (decode) or 0."""
+    prev = jnp.zeros_like(x[:, :1]) if state is None else state[:, None].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x: jax.Array, xx: jax.Array):
+    """RWKV6 data-dependent lerp: 5 mixed inputs (w, k, v, r, g)."""
+    B, S, D = x.shape
+    rk = p["tm_B"].shape[1]
+    base = x + xx * p["tm_mu"][0].astype(x.dtype)
+    lora = jnp.tanh(base @ p["tm_A"]).reshape(B, S, 5, rk)
+    dyn = jnp.einsum("bsjr,jrd->bsjd", lora, p["tm_B"])      # (B,S,5,D)
+    mus = p["tm_mu"][1:6].astype(x.dtype)                    # (5,D)
+    mixed = x[:, :, None] + xx[:, :, None] * (mus + dyn.astype(x.dtype))
+    return [mixed[:, :, j] for j in range(5)]                # w,k,v,r,g
+
+
+def wkv6_chunked(
+    r: jax.Array, k: jax.Array, v: jax.Array,   # (B,S,H,N)
+    lw: jax.Array,                              # (B,S,H,N) log-decay, ≤ 0, fp32
+    u: jax.Array,                               # (H,N) bonus
+    s0: jax.Array,                              # (B,H,N,N) initial state, fp32
+    chunk: int = 32,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (o (B,S,H,N), s_final (B,H,N,N))."""
+    B, S, H, N = r.shape
+    pad = (-S) % chunk
+    if pad:
+        # zero k/r and lw=0 (decay 1): padded steps neither read nor write
+        zeros = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, lw = zeros(r), zeros(k), zeros(v), zeros(lw)
+        S += pad
+    L, nc = chunk, S // chunk
+    rf = r.astype(jnp.float32).reshape(B, nc, L, H, N).transpose(1, 0, 2, 3, 4)
+    kf = k.astype(jnp.float32).reshape(B, nc, L, H, N).transpose(1, 0, 2, 3, 4)
+    vf = v.astype(jnp.float32).reshape(B, nc, L, H, N).transpose(1, 0, 2, 3, 4)
+    lwf = lw.reshape(B, nc, L, H, N).transpose(1, 0, 2, 3, 4)
+    uf = u.astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((L, L), jnp.float32), k=-1)     # strict i<t
+
+    def body(s, xs):
+        rc, kc, vc, lwc = xs                                 # (B,L,H,N)...
+        clw = jnp.cumsum(lwc, axis=1)                        # inclusive Σ_{s≤t}
+        clw_ex = clw - lwc                                   # exclusive Σ_{s<t}
+        # inter-chunk: state contribution
+        o_inter = jnp.einsum("blhc,bhcv->blhv", rc * jnp.exp(clw_ex), s)
+        # intra-chunk: pairwise decayed scores  A[t,i] (i<t) + u-bonus diag
+        decay = jnp.exp(clw_ex[:, :, None] - clw[:, None])   # (B,t,i,H,N), ≤1
+        a = jnp.einsum("bthc,bihc,btihc->btih", rc, kc, decay)
+        a = a * mask[None, :, :, None]
+        bonus = jnp.einsum("blhc,blhc->blh", rc, uf * kc)
+        o_intra = jnp.einsum("btih,bihv->bthv", a, vc) + bonus[..., None] * vc
+        # state update: decay to end-of-chunk + decayed key outer-products
+        k_dec = kc * jnp.exp(clw[:, -1:] - clw)              # ∏_{s>i} w_s
+        s_new = jnp.exp(clw[:, -1])[..., None] * s + \
+            jnp.einsum("bihc,bihv->bhcv", k_dec, vc)
+        return s_new, o_inter + o_intra
+
+    s_fin, o = jax.lax.scan(body, s0, (rf, kf, vf, lwf))
+    o = o.transpose(1, 0, 2, 3, 4).reshape(B, S, H, N)
+    if pad:
+        o = o[:, :S - pad]
+    return o, s_fin
+
+
+def wkv6_step(r, k, v, lw, u, s):
+    """One decode step.  r,k,v,lw: (B,H,N); s: (B,H,N,N) fp32."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    at = kf[..., :, None] * vf[..., None, :]                 # (B,H,N,N)
+    o = jnp.einsum("bhc,bhcv->bhv", rf, s + u[..., None] * at)
+    s_new = jnp.exp(lw)[..., None] * s + at
+    return o, s_new
+
+
+def _group_norm_heads(o: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """LayerNorm within each head (RWKV 'ln_x' GroupNorm), scale (H*N,)."""
+    B, S, H, N = o.shape
+    of = o.astype(jnp.float32)
+    mu = of.mean(-1, keepdims=True)
+    var = of.var(-1, keepdims=True)
+    normed = (of - mu) * jax.lax.rsqrt(var + eps)
+    return (normed.reshape(B, S, H * N) * scale.astype(jnp.float32)).astype(o.dtype)
+
+
+def rwkv_time_mix(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    ctx: Ctx,
+    *,
+    mode: str,
+    cache: Optional[Dict[str, jax.Array]],
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, S, D = x.shape
+    N = cfg.rwkv_head_dim
+    H = D // N
+    shift_state = cache["shift_tm"] if (cache is not None and mode == "decode") else None
+    xx = _token_shift(x, shift_state) - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xx)
+
+    r = (xr @ p["wr"]).reshape(B, S, H, N)
+    k = (xk @ p["wk"]).reshape(B, S, H, N)
+    v = (xv @ p["wv"]).reshape(B, S, H, N)
+    g = jax.nn.silu(xg @ p["wg"])
+    r = ctx.constrain(r, ("batch", "seq", "heads", None))
+    # data-dependent decay (fp32, log space):  lw = -exp(ww) ≤ 0
+    ww = p["w_base"].astype(jnp.float32) + \
+        (jnp.tanh(xw @ p["ww_A"]) @ p["ww_B"]).astype(jnp.float32)
+    lw = -jnp.exp(ww).reshape(B, S, H, N)
+
+    if mode == "decode":
+        s0 = cache["s"].astype(jnp.float32)
+        o, s_new = wkv6_step(r[:, 0], k[:, 0], v[:, 0], lw[:, 0], p["u"].astype(jnp.float32), s0)
+        o = o[:, None]
+        new_cache = {"s": s_new.astype(cache["s"].dtype),
+                     "shift_tm": x[:, -1], "shift_cm": cache["shift_cm"]}
+    else:
+        s0 = jnp.zeros((B, H, N, N), jnp.float32)
+        if ctx.use_pallas:
+            from repro.kernels.ops import wkv6_bshn
+            o, s_fin = wkv6_bshn(r, k, v, lw, p["u"].astype(jnp.float32),
+                                 s0, chunk=ctx.rwkv_chunk)
+        else:
+            o, s_fin = wkv6_chunked(r, k, v, lw, p["u"], s0, ctx.rwkv_chunk)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"s": s_fin.astype(cache["s"].dtype),
+                         "shift_tm": x[:, -1], "shift_cm": cache["shift_cm"]}
+    o = o.astype(x.dtype)
+    o = _group_norm_heads(o, p["ln_x"], cfg.norm_eps)
+    o = o * g
+    o = ctx.constrain(o, ("batch", "seq", "heads"))
+    return o @ p["wo"], new_cache
+
+
+def rwkv_channel_mix(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    ctx: Ctx,
+    *,
+    mode: str,
+    cache: Optional[Dict[str, jax.Array]],
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    shift_state = cache["shift_cm"] if (cache is not None and mode == "decode") else None
+    xx = _token_shift(x, shift_state) - x
+    xk = x + xx * p["cm_mu_k"].astype(x.dtype)
+    xr = x + xx * p["cm_mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk_c"]))
+    k = ctx.constrain(k, ("batch", "seq", "ffn"))
+    out = jax.nn.sigmoid(xr @ p["wr_c"]) * (k @ p["wv_c"])
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["shift_cm"] = x[:, -1]
+    return out, new_cache

@@ -1,0 +1,83 @@
+"""AdamW + warmup-cosine schedule, pure JAX.
+
+Optimizer state is a pytree parallel to the params (m, v per leaf) so it
+inherits the params' shardings leaf-for-leaf — that IS the ZeRO partitioning:
+params are FSDP/TP-sharded, so m and v are too.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.learning_rate * step / max(cfg.warmup_steps, 1)
+    decay_steps = max(cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps) / decay_steps, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.learning_rate * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_init(params, opt_dtype=jnp.float32) -> Dict[str, Any]:
+    zeros = lambda t: jax.tree.map(lambda p: jnp.zeros_like(p, opt_dtype), t)
+    return {"m": zeros(params), "v": zeros(params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    grads,
+    params,
+    state: Dict[str, Any],
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+    lr = cosine_schedule(cfg, count)
+
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, p, m, v):
+        g = g.astype(jnp.float32) * scale
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        mh = mf / b1c
+        vh = vf / b2c
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, p, m, v) for g, p, m, v in zip(flat_g, flat_p, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "count": count}, metrics

@@ -1,0 +1,8 @@
+from repro.train.steps import (  # noqa: F401
+    TrainState,
+    init_train_state,
+    loss_fn,
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+)

@@ -1,0 +1,146 @@
+"""Train / serve step functions (the "learner" compute of the platform).
+
+``make_train_step`` builds a pure (state, batch) -> (state, metrics) function:
+grad accumulation over microbatches (scan), optional int8 gradient
+compression with error feedback, global-norm clip, AdamW.  It is jit-able
+and pjit-able; shardings come from the abstract param tree + rule table.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.dist.compression import compress_grads, init_error_buffers
+from repro.models.layers import Ctx
+from repro.models.model import forward, init_cache
+from repro.models.params import init_params
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+Tree = Dict[str, Any]
+TrainState = Dict[str, Any]       # {params, opt, step, [err]}
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def loss_fn(
+    cfg: ModelConfig,
+    params: Tree,
+    batch: Tree,
+    ctx: Ctx,
+    remat_policy: str = "none",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, _, aux = forward(cfg, params, batch, ctx, mode="train",
+                             remat_policy=remat_policy)
+    labels = batch["labels"]
+    valid = labels >= 0
+    lab = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    ce = -(ll * valid).sum() / jnp.maximum(valid.sum(), 1)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+def init_train_state(cfg: ModelConfig, key: jax.Array,
+                     run: Optional[RunConfig] = None,
+                     grad_compression: bool = False) -> TrainState:
+    run = run or RunConfig()
+    params = init_params(cfg, key)
+    if run.master_dtype != "float32":
+        params = jax.tree.map(
+            lambda p: p.astype(run.master_dtype) if p.ndim >= 2 else p, params)
+    state: TrainState = {
+        "params": params,
+        "opt": adamw_init(params, jnp.dtype(run.opt_dtype)),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if grad_compression:
+        state["err"] = init_error_buffers(params)
+    return state
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    ctx: Ctx,
+    run: RunConfig,
+    opt_cfg: Optional[AdamWConfig] = None,
+    grad_compression: bool = False,
+) -> Callable[[TrainState, Tree], Tuple[TrainState, Dict[str, jax.Array]]]:
+    opt_cfg = opt_cfg or AdamWConfig(
+        learning_rate=run.learning_rate, weight_decay=run.weight_decay,
+        grad_clip_norm=run.grad_clip_norm, warmup_steps=run.warmup_steps,
+        total_steps=run.total_steps)
+    n_mb = run.num_microbatches
+
+    def loss_for_grad(params, mb):
+        return loss_fn(cfg, params, mb, ctx, run.remat_policy)
+
+    grad_fn = jax.value_and_grad(loss_for_grad, has_aux=True)
+
+    def split_mb(batch):
+        def r(x):
+            B = x.shape[0]
+            assert B % n_mb == 0, (B, n_mb)
+            return x.reshape(n_mb, B // n_mb, *x.shape[1:])
+        return jax.tree.map(r, batch)
+
+    def train_step(state: TrainState, batch: Tree):
+        params = state["params"]
+        if n_mb == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbs = split_mb(batch)
+
+            def acc_body(carry, mb):
+                (loss, metrics), g = grad_fn(params, mb)
+                gsum, lsum = carry
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), ms = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / n_mb, gsum)
+            loss = lsum / n_mb
+            metrics = jax.tree.map(lambda m: m.mean(), ms)
+
+        new_state = dict(state)
+        if grad_compression:
+            grads, new_state["err"] = compress_grads(grads, state["err"])
+        new_p, new_opt, opt_metrics = adamw_update(
+            opt_cfg, grads, params, state["opt"])
+        new_state.update(params=new_p, opt=new_opt, step=state["step"] + 1)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, ctx: Ctx):
+    """(params, batch, cache) -> (last_logits, filled_cache)."""
+    def prefill_step(params, batch, cache):
+        logits, new_cache, _ = forward(cfg, params, batch, ctx,
+                                       mode="prefill", cache=cache)
+        return logits, new_cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, ctx: Ctx):
+    """(params, tokens (B,1), cache, pos) -> (logits, cache)."""
+    def decode_step(params, batch, cache, pos):
+        logits, new_cache, _ = forward(cfg, params, batch, ctx,
+                                       mode="decode", cache=cache, pos=pos)
+        return logits, new_cache
+    return decode_step

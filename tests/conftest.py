@@ -1,0 +1,8 @@
+import os
+
+# Tests run on the single real CPU device (the 512-device override is ONLY
+# for the dry-run, which sets it itself before importing jax).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,87 @@
+"""Config registry + shape grid + parameter counting."""
+import pytest
+
+from repro.configs import SHAPES, get_config, list_configs, shape_applicable
+from repro.models.params import count_params
+
+ASSIGNED = [
+    "recurrentgemma-9b", "rwkv6-7b", "qwen3-0.6b", "gemma2-9b",
+    "mistral-large-123b", "qwen2.5-32b", "seamless-m4t-medium",
+    "internvl2-76b", "deepseek-v2-236b", "granite-moe-1b-a400m",
+]
+
+# Published non-embedding parameter counts (approximate, ±15%)
+EXPECTED_PARAMS = {
+    "mistral-large-123b": 122e9,
+    "qwen2.5-32b": 31e9,
+    "gemma2-9b": 8.3e9,         # 9B includes embeddings (256k vocab)
+    "rwkv6-7b": 6.8e9,
+    "recurrentgemma-9b": 7.6e9, # 9B includes embeddings
+    "internvl2-76b": 69e9,      # LLM backbone (frontend is a stub)
+    "deepseek-v2-236b": 232e9,
+}
+
+
+def test_all_assigned_archs_registered():
+    for a in ASSIGNED:
+        cfg = get_config(a)
+        assert cfg.name == a
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("nope-13b")
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_param_counts_sane(arch):
+    cfg = get_config(arch)
+    n = count_params(cfg)
+    assert n > 1e8, arch
+    if arch in EXPECTED_PARAMS:
+        exp = EXPECTED_PARAMS[arch]
+        assert 0.8 * exp < n < 1.2 * exp, (arch, n, exp)
+
+
+def test_moe_active_params():
+    cfg = get_config("deepseek-v2-236b")
+    total = count_params(cfg)
+    active = count_params(cfg, active_only=True)
+    # DeepSeek-V2: 236B total, 21B active
+    assert active < 0.15 * total
+    assert 15e9 < active < 30e9, active
+
+
+def test_long_500k_applicability():
+    long = SHAPES["long_500k"]
+    ok_archs = {a for a in ASSIGNED if shape_applicable(get_config(a), long)[0]}
+    assert ok_archs == {"recurrentgemma-9b", "rwkv6-7b"}
+
+
+def test_padded_vocab_multiple():
+    for a in ASSIGNED:
+        cfg = get_config(a)
+        assert cfg.padded_vocab % cfg.pad_vocab_multiple == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+
+
+def test_reduced_preserves_family():
+    for a in ASSIGNED:
+        cfg = get_config(a)
+        r = cfg.reduced()
+        assert r.block_pattern == cfg.block_pattern
+        assert r.is_moe == cfg.is_moe
+        assert r.use_mla == cfg.use_mla
+        assert r.is_encoder_decoder == cfg.is_encoder_decoder
+        assert r.sub_quadratic == cfg.sub_quadratic
+        assert count_params(r) < 3e6
+
+
+def test_layer_kinds_pattern():
+    cfg = get_config("recurrentgemma-9b")
+    kinds = cfg.layer_kinds()
+    assert len(kinds) == 38
+    assert kinds[0] == kinds[1] == "recurrent"
+    assert kinds[2] == "local"
+    g2 = get_config("gemma2-9b").layer_kinds()
+    assert g2[0] == "local" and g2[1] == "global" and len(g2) == 42

@@ -1,0 +1,25 @@
+"""Elastic re-meshing plan properties."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.elastic import ElasticPolicy
+
+
+def test_decide():
+    pol = ElasticPolicy(min_world=2)
+    assert pol.decide(8, 8) == 8
+    assert pol.decide(8, 5) == 5
+    assert pol.decide(8, 1) is None
+
+
+@settings(max_examples=50, deadline=None)
+@given(old=st.integers(1, 64), new=st.integers(1, 64),
+       batch=st.integers(1, 4096))
+def test_remesh_plan_properties(old, new, batch):
+    plan = ElasticPolicy().remesh_plan(old, new, batch)
+    # every old shard is owned by exactly one survivor
+    owned = sorted(s for shards in plan.shard_map.values() for s in shards)
+    assert owned == list(range(old))
+    # batch conserved and balanced within 1
+    per = list(plan.per_learner_batch.values())
+    assert sum(per) == batch
+    assert max(per) - min(per) <= 1

@@ -1,0 +1,126 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + property tests
+(interpret mode executes the kernel bodies in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.models.attention import flash_attention_jnp
+
+RNG = np.random.default_rng(42)
+
+
+def _attn_inputs(B, S, H, K, hd, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, S, H, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, S, K, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, S, K, hd)), dtype)
+    return q, k, v
+
+
+def _ref_bshd(q, k, v, **kw):
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    out = ref.attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(B * H, S, hd),
+        k.transpose(0, 2, 1, 3).reshape(B * K, S, hd),
+        v.transpose(0, 2, 1, 3).reshape(B * K, S, hd),
+        group=H // K, **kw)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("S", [128, 256, 384])
+@pytest.mark.parametrize("H,K", [(4, 4), (8, 2), (8, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(S, H, K, dtype):
+    q, k, v = _attn_inputs(2, S, H, K, 64, dtype)
+    kw = dict(scale=64 ** -0.5, causal=True, window=0, logit_cap=0.0)
+    out = ops.flash_attention_bshd(q, k, v, q_blk=128, kv_blk=128, **kw)
+    expect = _ref_bshd(q, k, v, **kw)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 128, 500])
+@pytest.mark.parametrize("cap", [0.0, 30.0])
+def test_flash_attention_window_softcap(window, cap):
+    q, k, v = _attn_inputs(1, 256, 4, 2, 64, jnp.float32)
+    kw = dict(scale=64 ** -0.5, causal=True, window=window, logit_cap=cap)
+    out = ops.flash_attention_bshd(q, k, v, q_blk=128, kv_blk=128, **kw)
+    expect = _ref_bshd(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+
+def test_flash_matches_model_jnp_path():
+    """The model's blocked-jnp attention and the Pallas kernel agree."""
+    q, k, v = _attn_inputs(2, 256, 8, 4, 64, jnp.float32)
+    a = flash_attention_jnp(q, k, v, scale=0.125, causal=True, window=64,
+                            q_block=128, kv_block=128)
+    b = ops.flash_attention_bshd(q, k, v, scale=0.125, causal=True,
+                                 window=64, q_blk=128, kv_blk=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(S=st.integers(2, 50), R=st.sampled_from([8, 128, 256]),
+       seed=st.integers(0, 2**31 - 1))
+def test_rglru_property(S, R, seed):
+    r = np.random.default_rng(seed)
+    la = -jnp.asarray(r.uniform(0.01, 3.0, (2, S, R)), jnp.float32)
+    b = jnp.asarray(r.normal(size=(2, S, R)), jnp.float32)
+    h0 = jnp.asarray(r.normal(size=(2, R)), jnp.float32)
+    out = ops.rglru_scan_bsr(la, b, h0)
+    expect = ref.rglru_ref(la, b, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_decay_bound():
+    """|h| stays bounded by |b|/(1-a) for constant decay (stability)."""
+    la = jnp.full((1, 500, 8), -0.1, jnp.float32)
+    b = jnp.ones((1, 500, 8), jnp.float32)
+    out = ops.rglru_scan_bsr(la, b, jnp.zeros((1, 8), jnp.float32))
+    bound = 1.0 / (1.0 - float(jnp.exp(-0.1))) + 1e-3
+    assert float(jnp.abs(out).max()) <= bound
+
+
+@pytest.mark.parametrize("S", [32, 64, 70, 128])
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_wkv6_sweep(S, chunk):
+    B, H, N = 2, 4, 64
+    r = jnp.asarray(RNG.normal(size=(B, S, H, N)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, H, N)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, H, N)), jnp.float32)
+    lw = -jnp.exp(jnp.asarray(RNG.uniform(-6, -1, (B, S, H, N)), jnp.float32))
+    u = jnp.asarray(RNG.normal(size=(H, N)), jnp.float32) * 0.1
+    s0 = jnp.asarray(RNG.normal(size=(B, H, N, N)), jnp.float32) * 0.1
+    o, sf = ops.wkv6_bshn(r, k, v, lw, u, s0, chunk=chunk)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    o_r, sf_r = ref.wkv6_ref(fold(r), fold(k), fold(v), fold(lw),
+                             jnp.broadcast_to(u[None], (B, H, N)).reshape(B * H, 1, N),
+                             s0.reshape(B * H, N, N))
+    o_r = o_r.reshape(B, H, S, N).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_r),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(sf.reshape(B * H, N, N)),
+                               np.asarray(sf_r), atol=2e-4, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), decay=st.floats(-5.0, -0.5))
+def test_wkv6_state_decay_property(seed, decay):
+    """With r=0 the output is 0 and the state decays exactly by exp(lw)."""
+    B, S, H, N = 1, 32, 2, 64
+    rng = np.random.default_rng(seed)
+    zero = jnp.zeros((B, S, H, N), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32) * 0.0
+    lw = jnp.full((B, S, H, N), decay, jnp.float32)
+    u = jnp.zeros((H, N), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(B, H, N, N)), jnp.float32)
+    o, sf = ops.wkv6_bshn(zero, k, zero, lw, u, s0)
+    assert float(jnp.abs(o).max()) == 0.0
+    expect = s0 * np.exp(decay * S)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(expect),
+                               atol=1e-5, rtol=1e-4)

@@ -1,0 +1,294 @@
+"""Platform dependability — the paper's §II guarantees, each one tested.
+
+Virtual-time platform; every failure here is injected mid-flight and the
+assertion is about the *system invariant*, not about timing.
+"""
+import pytest
+
+from repro.core import DLaaSPlatform, JobManifest
+from repro.core.scheduler import Unschedulable
+from repro.core.tenancy import NetworkPolicy
+
+
+def boot(seed=0, **kw):
+    p = DLaaSPlatform(seed=seed, **kw)
+    p.run(10)            # core services come up
+    return p
+
+
+def submit(p, **kw):
+    kw.setdefault("name", "job")
+    h = p.submit(JobManifest(**kw))
+    p.run(5)
+    assert h.acked and h.job_id
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Submission / metadata durability
+# ---------------------------------------------------------------------------
+def test_job_never_lost_once_acked():
+    """Ack only after Mongo persist: kill EVERYTHING right after the ack —
+    the job must still run to completion."""
+    p = boot(seed=1)
+    h = submit(p, learners=2, total_steps=20, step_time_s=0.2)
+    for pod in ("api-0", "api-1", "lcm-0"):
+        p.kill_pod(pod)
+    assert p.run_until_terminal(h.job_id, timeout=600) == "COMPLETED"
+
+
+def test_submission_blocks_while_metadata_down():
+    """API does not ack while Mongo is down; acks after it heals; no loss."""
+    p = boot(seed=2)
+    p.metadata.crash()
+    h = p.submit(JobManifest(name="j", learners=1, total_steps=10,
+                             step_time_s=0.2))
+    p.run(5)
+    assert not h.acked
+    p.metadata.restart()
+    p.run(5)
+    assert h.acked
+    assert p.run_until_terminal(h.job_id, timeout=300) == "COMPLETED"
+
+
+def test_invalid_manifest_rejected():
+    p = boot()
+    h = p.submit(JobManifest(name="bad", learners=0))
+    p.run(3)
+    assert h.rejected and not h.acked
+
+
+def test_api_failover():
+    """Two API replicas: killing one leaves the service usable; killing both
+    makes calls fail until K8S restarts a replica (3-5 s)."""
+    from repro.core.cluster import RpcError
+    p = boot(seed=3)
+    h = submit(p, learners=1, total_steps=50, step_time_s=0.3)
+    p.kill_pod("api-0")
+    p.run(0.5)
+    assert p.client.status(h.job_id)["state"]        # still served
+    p.kill_pod("api-1")
+    p.run(0.5)
+    with pytest.raises(RpcError):
+        p.client.status(h.job_id)
+    p.run(10)                                        # deployment restarts pods
+    assert p.client.status(h.job_id)["state"]
+
+
+# ---------------------------------------------------------------------------
+# Atomic deployment (Guardian under K8S-Job semantics)
+# ---------------------------------------------------------------------------
+def test_guardian_crash_mid_deploy_rolls_back_and_redeploys():
+    p = boot(seed=13)
+    h = submit(p, learners=2, total_steps=20, step_time_s=0.3)
+    p.run(1.5)                                        # guardian mid-deploy
+    assert p.kill_pod(f"guardian-{h.job_id}")
+    assert p.run_until_terminal(h.job_id, timeout=600) == "COMPLETED"
+    events = [e["event"] for e in p.client.events(h.job_id)]
+    assert any("ROLLBACK" in e for e in events)
+    # no leaked resources or quota
+    assert p.volumes.active() == []
+    assert p.tenancy.allocated.get("default", 0) == 0
+
+
+def test_guardian_repeated_crashes_exhaust_backoff_and_fail_job():
+    p = boot(seed=17)
+    h = submit(p, learners=1, total_steps=1000, step_time_s=0.5)
+
+    def keep_killing():
+        if p.kill_pod(f"guardian-{h.job_id}") is not None:
+            pass
+        p.sim.schedule(2.0, keep_killing)
+    keep_killing()
+    state = p.run_until_terminal(h.job_id, timeout=400)
+    assert state == "FAILED"
+    assert p.tenancy.allocated.get("default", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# Learner / node failures
+# ---------------------------------------------------------------------------
+def test_learner_crash_recovers_from_checkpoint():
+    p = boot(seed=11)
+    h = submit(p, learners=4, gpus_per_learner=1, total_steps=80,
+               step_time_s=0.5, checkpoint_interval_s=8)
+    p.run(45)
+    assert p.kill_pod(f"learner-{h.job_id}-2")
+    assert p.run_until_terminal(h.job_id, timeout=900) == "COMPLETED"
+    st = p.client.status(h.job_id)
+    assert st["restarts"] >= 1
+    logs = p.client.logs(h.job_id, 2)
+    assert "restored checkpoint" in logs or "rolled back" in logs
+
+
+def test_learner_crash_rejoin_mode():
+    p = boot(seed=11)
+    h = submit(p, learners=4, gpus_per_learner=1, total_steps=80,
+               step_time_s=0.5, checkpoint_interval_s=8,
+               extras={"recovery_mode": "rejoin"})
+    p.run(45)
+    p.kill_pod(f"learner-{h.job_id}-2")
+    assert p.run_until_terminal(h.job_id, timeout=900) == "COMPLETED"
+    assert "rejoined" in p.client.logs(h.job_id, 2)
+
+
+def test_node_crash_recovery():
+    p = boot(seed=5, n_nodes=8, gpus_per_node=4)
+    h = submit(p, learners=3, gpus_per_learner=2, total_steps=60,
+               step_time_s=0.5, checkpoint_interval_s=10)
+    p.run(40)
+    node = p.crash_node_of(f"learner-{h.job_id}-0")
+    assert node is not None
+    assert p.run_until_terminal(h.job_id, timeout=1200) == "COMPLETED"
+
+
+def test_max_restarts_exceeded_fails_job():
+    p = boot(seed=23)
+    h = submit(p, learners=2, total_steps=2000, step_time_s=0.5,
+               checkpoint_interval_s=10, max_restarts=2)
+
+    def kill_loop():
+        p.kill_pod(f"learner-{h.job_id}-0")
+        p.sim.schedule(40.0, kill_loop)
+    p.sim.schedule(30.0, kill_loop)
+    assert p.run_until_terminal(h.job_id, timeout=2000) == "FAILED"
+    assert p.volumes.active() == []
+
+
+# ---------------------------------------------------------------------------
+# Status / logs reliability
+# ---------------------------------------------------------------------------
+def test_status_updates_survive_statestore_replica_crash():
+    p = boot(seed=7)
+    h = submit(p, learners=2, total_steps=60, step_time_s=0.5)
+    p.run(30)
+    ldr = p.statestore.leader()
+    p.statestore.crash_replica(ldr.idx)               # 2/3 keep quorum
+    assert p.run_until_terminal(h.job_id, timeout=600) == "COMPLETED"
+
+
+def test_statuses_timestamped_and_ordered():
+    p = boot(seed=8)
+    h = submit(p, learners=1, total_steps=20, step_time_s=0.2)
+    p.run_until_terminal(h.job_id, timeout=300)
+    ev = p.client.events(h.job_id)
+    times = [e["t"] for e in ev]
+    assert times == sorted(times)
+    names = " ".join(e["event"] for e in ev)
+    for marker in ("SUBMITTED", "DEPLOYING", "PROCESSING", "COMPLETED"):
+        assert marker in names
+
+
+def test_logs_stream_despite_learner_crash():
+    p = boot(seed=9)
+    h = submit(p, learners=1, total_steps=200, step_time_s=0.3,
+               checkpoint_interval_s=10, max_restarts=5)
+    p.run(40)
+    p.kill_pod(f"learner-{h.job_id}-0")
+    p.run(10)
+    # logs written before the crash are already shipped to the object store
+    assert "step" in p.client.logs(h.job_id) or \
+           "checkpoint" in p.client.logs(h.job_id)
+
+
+def test_halt():
+    p = boot(seed=10)
+    h = submit(p, learners=2, total_steps=10_000, step_time_s=0.5)
+    p.run(20)
+    p.client.halt(h.job_id)
+    assert p.run_until_terminal(h.job_id, timeout=300) == "HALTED"
+    assert p.volumes.active() == []
+    assert p.tenancy.allocated.get("default", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenancy
+# ---------------------------------------------------------------------------
+def test_tenant_quota_enforced():
+    p = boot(seed=12)
+    p.tenancy.add_tenant("small", gpu_quota=2)
+    h = p.submit(JobManifest(name="big", tenant="small", learners=4,
+                             gpus_per_learner=1, total_steps=10))
+    p.run(10)
+    assert p.run_until_terminal(h.job_id, timeout=300) == "FAILED"
+
+
+def test_gang_scheduling_all_or_nothing():
+    p = boot(seed=14, n_nodes=2, gpus_per_node=4)       # 8 GPUs total
+    h = p.submit(JobManifest(name="toobig", learners=3, gpus_per_learner=4,
+                             total_steps=10))
+    p.run(10)
+    assert p.run_until_terminal(h.job_id, timeout=300) == "FAILED"
+    assert p.tenancy.allocated.get("default", 0) == 0   # nothing leaked
+
+
+def test_metering_accumulates():
+    p = boot(seed=15)
+    h = submit(p, learners=2, gpus_per_learner=2, total_steps=20,
+               step_time_s=0.5)
+    p.run_until_terminal(h.job_id, timeout=300)
+    assert p.client.gpu_seconds("default") > 0
+
+
+def test_network_isolation():
+    labels = {"role": "learner", "job": "job-1", "tenant": "t1"}
+    assert not NetworkPolicy.allowed(labels, "mongo")
+    assert not NetworkPolicy.allowed(labels, "dlaas-lcm")
+    assert not NetworkPolicy.allowed(labels, "volume/job-2")
+    assert not NetworkPolicy.allowed(labels, "status/job-2/learner/0")
+    assert NetworkPolicy.allowed(labels, "volume/job-1")
+    assert NetworkPolicy.allowed(labels, "status/job-1/learner/0")
+    assert NetworkPolicy.allowed(labels, "cos/datasets/imagenet")
+    assert NetworkPolicy.allowed({"role": "guardian"}, "mongo")
+
+
+# ---------------------------------------------------------------------------
+# Multi-job concurrency
+# ---------------------------------------------------------------------------
+def test_many_concurrent_jobs():
+    p = boot(seed=16, n_nodes=32)
+    handles = []
+    for i in range(6):
+        handles.append(submit(p, name=f"j{i}", learners=2,
+                              gpus_per_learner=1,
+                              total_steps=20 + 5 * i, step_time_s=0.3))
+    for h in handles:
+        assert p.run_until_terminal(h.job_id, timeout=900) == "COMPLETED"
+    assert p.volumes.active() == []
+    assert p.tenancy.allocated.get("default", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# Elasticity
+# ---------------------------------------------------------------------------
+def test_elastic_shrink_on_capacity_loss():
+    """Node dies, no spare GPUs: a non-elastic job stalls on the PENDING
+    replacement, an elastic job shrinks its DP world and completes."""
+    p = boot(seed=31, n_nodes=3, gpus_per_node=4)
+    h = submit(p, learners=3, gpus_per_learner=4, total_steps=100,
+               step_time_s=0.4, checkpoint_interval_s=15, elastic=True,
+               max_restarts=10)
+    p.run(40)                                   # training underway
+    node = p.crash_node_of(f"learner-{h.job_id}-1")
+    assert node is not None
+    assert p.run_until_terminal(h.job_id, timeout=1500) == "COMPLETED"
+    events = " | ".join(e["event"] for e in p.client.events(h.job_id))
+    assert "ELASTIC shrink 3 -> 2" in events, events
+    # released quota for the shrunk-away learner
+    assert p.tenancy.allocated.get("default", 0) == 0
+
+
+def test_pending_pod_schedules_after_heal():
+    """Without elasticity, the replacement stays PENDING until the node
+    heals, then training resumes and completes (no crash of the control
+    plane on unschedulable pods)."""
+    p = boot(seed=33, n_nodes=3, gpus_per_node=4)
+    h = submit(p, learners=3, gpus_per_learner=4, total_steps=60,
+               step_time_s=0.4, checkpoint_interval_s=15, max_restarts=10)
+    p.run(30)
+    node = p.crash_node_of(f"learner-{h.job_id}-2")
+    p.run(60)                                    # stalled, pod PENDING
+    st = p.client.status(h.job_id)
+    assert st["state"] == "PROCESSING"
+    p.cluster.heal_node(node)
+    assert p.run_until_terminal(h.job_id, timeout=1500) == "COMPLETED"

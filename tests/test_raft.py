@@ -1,0 +1,101 @@
+"""Raft/statestore: election safety, durability, availability — including
+randomized crash schedules (hypothesis)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sim import Sim
+from repro.core.statestore import StateStore
+
+
+def boot(seed=0):
+    sim = Sim(seed=seed)
+    ss = StateStore(sim)
+    sim.run_for(2.0)
+    assert ss.leader() is not None
+    return sim, ss
+
+
+def put(sim, ss, key, val, timeout=5.0):
+    out = {}
+
+    def client():
+        out["ok"] = yield from ss.put(key, val, timeout=timeout)
+    sim.spawn(client())
+    sim.run_for(timeout + 1.0)
+    return out.get("ok", False)
+
+
+def test_put_get():
+    sim, ss = boot()
+    assert put(sim, ss, "a", 1)
+    assert ss.get("a") == 1
+
+
+def test_write_survives_leader_crash():
+    sim, ss = boot(seed=3)
+    assert put(sim, ss, "k", "v")
+    ldr = ss.leader()
+    ss.crash_replica(ldr.idx)
+    sim.run_for(2.0)
+    assert ss.leader() is not None and ss.leader().idx != ldr.idx
+    assert ss.get("k") == "v"
+
+
+def test_unavailable_without_quorum_then_recovers():
+    sim, ss = boot(seed=4)
+    a = ss.leader().idx
+    ss.crash_replica(a)
+    sim.run_for(1.0)
+    b = ss.leader().idx
+    ss.crash_replica(b)
+    sim.run_for(1.0)
+    assert not ss.available()
+    assert not put(sim, ss, "x", 1, timeout=1.0)       # stalls, times out
+    ss.restart_replica(a)
+    sim.run_for(3.0)
+    assert put(sim, ss, "x", 2)
+    assert ss.get("x") == 2
+
+
+def test_restarted_replica_catches_up():
+    sim, ss = boot(seed=5)
+    assert put(sim, ss, "k1", 1)
+    victim = (ss.leader().idx + 1) % 3
+    ss.crash_replica(victim)
+    assert put(sim, ss, "k2", 2)
+    ss.restart_replica(victim)
+    sim.run_for(2.0)                                    # heartbeats replicate
+    node = ss.replicas[victim]
+    assert node.kv.get("k1") == 1 and node.kv.get("k2") == 2
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       crashes=st.lists(st.tuples(st.integers(0, 2), st.floats(0.2, 3.0)),
+                        max_size=4))
+def test_election_safety_under_crashes(seed, crashes):
+    """At most one leader is ever elected per term, whatever the crash/restart
+    schedule (Raft's core safety property)."""
+    sim = Sim(seed=seed)
+    ss = StateStore(sim)
+    for idx, when in crashes:
+        sim.schedule(when, ss.crash_replica, idx)
+        sim.schedule(when + 1.0, ss.restart_replica, idx)
+    results = []
+
+    def client():
+        ok = yield from ss.put("key", "val", timeout=8.0)
+        results.append(ok)
+    sim.schedule(2.0, lambda: sim.spawn(client()))
+    sim.run_for(12.0)
+
+    hist = []
+    for r in ss.replicas:
+        hist.extend(r.leader_history)
+    terms = [t for t, _ in hist]
+    assert len(terms) == len(set(terms)), hist
+    # committed writes must be durable and consistent across live replicas
+    if results and results[0]:
+        vals = {r.kv.get("key") for r in ss.replicas if r.alive and
+                r.commit_index >= 1}
+        assert vals <= {"val"}

@@ -1,0 +1,74 @@
+"""Logical-axis sharding rules: auto-drop, mesh portability, properties."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import DEFAULT_RULES, ShardingRules, logical_to_spec
+
+
+def mesh2():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def fake_mesh(shape, axes):
+    """Abstract mesh for spec computation only (uses the 1 real device via
+    reshaping is impossible — so compute specs against a 1x1 mesh and a
+    synthetic sizes table)."""
+    return jax.make_mesh(shape, axes)
+
+
+def test_basic_mapping():
+    mesh = mesh2()
+    spec = logical_to_spec(("batch", None, "embed_act"), (8, 4, 16), mesh)
+    assert spec == P("data") or spec == P(("data",))
+
+
+def test_auto_drop_indivisible():
+    # kv_heads=8 cannot shard over model=1? trivially ok; test the divisibility
+    # logic with a rules table mapping to a 1-sized axis (always divides) and
+    # an axis absent from the mesh (dropped).
+    mesh = mesh2()
+    rules = DEFAULT_RULES.override(heads=("model", "pod"))  # pod absent
+    spec = logical_to_spec(("embed", "heads"), (64, 48), mesh, rules)
+    assert spec in (P("data", "model"), P("data", ("model",)))
+
+
+def test_axis_used_once():
+    mesh = mesh2()
+    rules = DEFAULT_RULES.override(a=("model",), b=("model",))
+    spec = logical_to_spec(("a", "b"), (4, 4), mesh, rules)
+    # second dim cannot reuse "model"
+    assert spec == P("model")
+
+
+def test_unknown_axis_raises():
+    with pytest.raises(KeyError):
+        logical_to_spec(("nonsense",), (4,), mesh2())
+
+
+@settings(max_examples=30, deadline=None)
+@given(dim=st.integers(1, 64))
+def test_autodrop_always_valid(dim):
+    """Whatever the dim, the produced spec's axis sizes divide it."""
+    mesh = mesh2()
+    spec = logical_to_spec(("ffn",), (dim,), mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for entry in spec:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = int(np.prod([sizes[a] for a in axes]))
+        assert dim % n == 0
+
+
+def test_production_rules_cover_model_axes():
+    """Every logical axis the models use has a rule."""
+    used = ["batch", "seq", "resid_seq", "embed", "embed_act", "vocab",
+            "vocab_act", "heads", "kv_heads", "kv_seq", "head_dim", "ffn",
+            "experts", "expert_ffn", "rnn", "layers", "lora", "conv",
+            "capacity"]
+    table = DEFAULT_RULES.as_dict()
+    for name in used:
+        assert name in table, name

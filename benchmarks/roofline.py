@@ -48,6 +48,9 @@ def roofline_row(arch: str, shape: str) -> dict | None:
     rec = load_cell(arch, shape)
     dr = rec.get("dryrun", {})
     an = rec.get("analysis", {})
+    if not rec:
+        # fresh checkout: the sweep hasn't been run — not a failure
+        return {"arch": arch, "shape": shape, "missing": True}
     if dr.get("skipped") or an.get("skipped"):
         return {"arch": arch, "shape": shape, "skipped": dr.get("skipped") or
                 an.get("skipped")}
@@ -89,9 +92,19 @@ def all_rows():
 
 
 def main():
+    rows = all_rows()
+    missing = sum(1 for r in rows if r.get("missing"))
+    if missing == len(rows):
+        print(f"(no dry-run artifacts for any of the {missing} cells — run "
+              "`python -m repro.launch.dryrun --all` and "
+              "`python -m repro.launch.analysis` to populate artifacts/)")
+        return
     print("arch,shape,t_compute_ms,t_memory_ms,t_collective_ms,dominant,"
           "useful_flops_ratio,roofline_mfu,temp_GB")
-    for r in all_rows():
+    for r in rows:
+        if r.get("missing"):
+            print(f"{r['arch']},{r['shape']},MISSING,,,,")
+            continue
         if r.get("skipped"):
             print(f"{r['arch']},{r['shape']},SKIP,,,,{r['skipped'][:40]}...")
             continue

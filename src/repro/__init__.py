@@ -1,0 +1,8 @@
+"""repro — reproduction of "Dependability in a Multi-tenant
+Multi-framework Deep Learning as-a-Service Platform" grown into a
+JAX/Pallas training-and-serving substrate.
+
+Subpackages: ``core`` (platform sim), ``dist`` (sharded execution),
+``models`` / ``train`` / ``optim`` / ``kernels`` (learner compute),
+``launch`` (dry-run, perf, serve), ``configs``, ``data``, ``testing``.
+"""

@@ -255,6 +255,10 @@ class RunConfig:
     # — the §Perf hillclimbing knob (e.g. (("resid_seq", ("model",)),) turns
     # on sequence-parallel residuals for this arch × shape).
     sharding_overrides: Tuple[Tuple[str, Tuple[str, ...]], ...] = ()
+    # Gradient compression on the learner all-reduce ("none" | "int8" |
+    # "topk") — the paper's efficiency-vs-dependability tradeoff, resolved
+    # by repro.dist.compression.resolve_compression.
+    grad_compression: str = "none"
 
 
 # Registry -------------------------------------------------------------------

@@ -17,8 +17,9 @@ ranges so recovery-time measurements are honest.
 from __future__ import annotations
 
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Generator, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, Generator, List, Optional, Tuple
 
 from repro.core.sim import Sim
 
@@ -222,7 +223,11 @@ class Deployment(Controller):
     def on_pod_done(self, pod: Pod) -> None:
         if self.deleted or pod.status == SUCCEEDED:
             return
-        idx = next(i for i, p in enumerate(self.pods) if p is pod)
+        # Stale notifications happen (a watch event for a pod this
+        # controller already replaced) — same guard as StatefulSet.
+        idx = next((i for i, p in enumerate(self.pods) if p is pod), None)
+        if idx is None:
+            return
         self.pods[idx] = self.cluster._create_pod(self.make_spec(idx), self)
 
     def all_succeeded(self) -> bool:
@@ -230,13 +235,30 @@ class Deployment(Controller):
 
 
 # ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PodRecord:
+    """Lightweight tombstone for a garbage-collected terminal pod, kept in
+    a bounded ring so recovery-time measurements still see short-lived
+    incarnations without the live dict growing forever."""
+
+    uid: str
+    name: str
+    status: str
+    started_at: Optional[float]
+    finished_at: float
+
+
 class Cluster:
     """The K8S control plane + scheduler (see core/scheduler.py for policy)."""
+
+    #: terminal-pod tombstones retained for observability (Fig-4 scans)
+    HISTORY_LIMIT = 512
 
     def __init__(self, sim: Sim, n_nodes: int = 16, gpus_per_node: int = 8):
         self.sim = sim
         self.nodes = [Node(f"node-{i}", gpus_per_node) for i in range(n_nodes)]
         self.pods: Dict[str, Pod] = {}
+        self.pod_history: Deque[PodRecord] = deque(maxlen=self.HISTORY_LIMIT)
         self.services: Dict[str, List[Deployment]] = {}
         self._uid = itertools.count()
         self.scheduler = None      # injected by platform (core/scheduler.py)
@@ -249,8 +271,8 @@ class Cluster:
         elastic policy watches for prolonged PENDING."""
         pod = Pod(spec, None, self)
         pod.owner = owner
-        uname = f"{spec.name}#{next(self._uid)}"
-        self.pods[uname] = pod
+        pod.uid = f"{spec.name}#{next(self._uid)}"
+        self.pods[pod.uid] = pod
         self._try_place(pod)
         return pod
 
@@ -281,7 +303,30 @@ class Cluster:
         owner = getattr(pod, "owner", None)
         if owner is not None:
             # controller notices via watch after a short delay
-            self.sim.schedule(0.2, owner.on_pod_done, pod)
+            self.sim.schedule(0.2, self._notify_owner_and_gc, owner, pod)
+        else:
+            self._gc_pod(pod)
+
+    def _notify_owner_and_gc(self, owner: Controller, pod: Pod) -> None:
+        try:
+            owner.on_pod_done(pod)
+        finally:
+            self._gc_pod(pod)
+
+    def _gc_pod(self, pod: Pod) -> None:
+        """Drop a terminal pod from the live dict once its controller has
+        reacted.  Controllers keep their own references (a Deployment's
+        SUCCEEDED helper pods stay visible through ``dep.pods``); this only
+        bounds the cluster-wide ``name#uid`` map, which otherwise grows by
+        one entry per restart for the life of the simulation."""
+        if pod.status not in (SUCCEEDED, FAILED):
+            return
+        uid = getattr(pod, "uid", None)
+        if uid is not None and self.pods.get(uid) is pod:
+            del self.pods[uid]
+            self.pod_history.append(PodRecord(
+                uid=uid, name=pod.spec.name, status=pod.status,
+                started_at=pod.started_at, finished_at=self.sim.now))
 
     # -- fault injection (kubectl of the paper's Fig. 4) -----------------
     def kubectl_delete_pod(self, name: str) -> bool:

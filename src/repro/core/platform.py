@@ -114,11 +114,23 @@ class DLaaSPlatform:
     # -- observability ------------------------------------------------------------
     def recovery_time(self, pod_name: str, after_t: float) -> Optional[float]:
         """Virtual seconds from ``after_t`` until a pod with this name is
-        RUNNING again (Fig-4 measurement)."""
-        best = None
-        for pod in self.cluster.pods.values():
-            if pod.spec.name == pod_name and pod.started_at is not None \
-                    and pod.started_at >= after_t and pod.status == "RUNNING":
-                t = pod.started_at - after_t
-                best = t if best is None else min(best, t)
-        return best
+        RUNNING again (Fig-4 measurement).
+
+        Scans live pods plus the cluster's bounded tombstone history, so
+        an incarnation that recovered and then terminated again before the
+        measurement is read still counts its first recovery.  A non-None
+        ``started_at`` means the pod reached RUNNING — the same criterion
+        for live and tombstoned pods, so there is no blind window between
+        a pod going terminal and its GC tombstone being written."""
+        candidates = [
+            (pod.spec.name, pod.started_at)
+            for pod in self.cluster.pods.values()
+        ] + [
+            (rec.name, rec.started_at)
+            for rec in self.cluster.pod_history
+        ]
+        return min(
+            (started_at - after_t for name, started_at in candidates
+             if name == pod_name and started_at is not None
+             and started_at >= after_t),
+            default=None)

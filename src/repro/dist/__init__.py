@@ -1,0 +1,33 @@
+"""``repro.dist`` — the sharded-execution subsystem.
+
+The paper's platform (and its successor FfDL) treats the distribution
+layer as an explicit, swappable subsystem under the learner payload.
+This package is that layer for the JAX substrate:
+
+* :mod:`repro.dist.sharding`    — logical-axis → ``PartitionSpec`` rules
+  (one table, overridable per cell) + pytree-wide sharding inference.
+* :mod:`repro.dist.compression` — gradient compression with error
+  feedback (the paper's efficiency-vs-dependability tradeoff knob).
+* :mod:`repro.dist.mesh`        — device-mesh construction (production
+  pod meshes, data/fsdp/tensor meshes, single-host fallback).
+"""
+from repro.dist.compression import (  # noqa: F401
+    CompressionConfig,
+    compress_grads,
+    init_error_buffers,
+    resolve_compression,
+)
+from repro.dist.mesh import (  # noqa: F401
+    axis_sizes,
+    make_device_mesh,
+    make_host_mesh,
+    make_production_mesh,
+)
+from repro.dist.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    ShardingRules,
+    logical_to_spec,
+    make_named_sharding,
+    tree_shard_bytes,
+    tree_shardings,
+)

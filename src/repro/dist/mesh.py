@@ -1,0 +1,61 @@
+"""Device-mesh construction.  Functions, not module constants — importing
+this module never touches jax device state.
+
+Two mesh vocabularies are in play and ``repro.dist.sharding``'s rule
+table lists alternatives for both (absent axis names auto-drop):
+
+* the fixed production pod meshes, axes ``("pod", "data", "model")`` —
+  what the dry-run compiles against;
+* generic ``("data", "fsdp", "tensor")`` meshes sized to whatever
+  devices exist — what a learner pod builds at startup, with a
+  single-host fallback so the same code path runs on one CPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the pod axis is pure
+    data parallelism (cross-pod traffic = one gradient all-reduce/step)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """1-device mesh for CPU smoke tests (same code path as production)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_device_mesh(
+    *,
+    data: Optional[int] = None,
+    fsdp: int = 1,
+    tensor: int = 1,
+    devices: Optional[Sequence] = None,
+) -> Mesh:
+    """(data, fsdp, tensor) mesh over the available devices.
+
+    ``data=None`` absorbs whatever devices remain after fsdp × tensor.
+    If the request doesn't fit the device count the mesh degrades to pure
+    data parallelism over every device (single-host fallback) — the same
+    step function still compiles, just without model sharding.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    if data is None:
+        data = max(1, n // (fsdp * tensor))
+    if data * fsdp * tensor != n:
+        data, fsdp, tensor = n, 1, 1
+    import numpy as np
+    arr = np.asarray(devices).reshape(data, fsdp, tensor)
+    return Mesh(arr, ("data", "fsdp", "tensor"))

@@ -1,0 +1,6 @@
+"""jax-version seams shared by the Pallas TPU kernels."""
+import jax.experimental.pallas.tpu as pltpu
+
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; support both.
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def _rglru_kernel(la_ref, b_ref, h0_ref, o_ref, carry, *, t_blk: int):
     ti = pl.program_id(2)
@@ -64,7 +66,7 @@ def rglru_scan(
                                lambda bi, ri, ti: (bi, ti, ri)),
         out_shape=jax.ShapeDtypeStruct((B, S, R), jnp.float32),
         scratch_shapes=[pltpu.VMEM((1, r_blk), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(log_a, b, h0)

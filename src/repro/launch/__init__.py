@@ -1,0 +1,5 @@
+"""Launcher layer: dry-run compilation, perf hillclimb, serve loop.
+
+NOTE: ``repro.launch.dryrun`` / ``perf`` / ``analysis`` set ``XLA_FLAGS``
+(512 fake host devices) at import — import them only in a fresh process.
+"""

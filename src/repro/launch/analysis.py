@@ -58,7 +58,8 @@ def _measure(arch, shape_name, multi_pod, cfg, run):
     if lowered is None:
         return None
     compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
+    from repro.launch.dryrun import cost_dict
+    cost = cost_dict(compiled)
     rec = {
         "flops": float(cost.get("flops", 0.0)),
         "bytes": float(cost.get("bytes accessed", 0.0)),

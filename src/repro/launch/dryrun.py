@@ -36,6 +36,15 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 
+def cost_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` compat: jax < 0.5 returns a list with
+    one dict per computation, newer jax returns the dict directly."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def parse_collectives(hlo_text: str) -> dict:
     """Sum output bytes of every collective op in the optimized HLO.
 
@@ -129,7 +138,7 @@ def build_lowered(arch: str, shape_name: str, multi_pod: bool,
     if kind == "train":
         step = make_train_step(cfg, ctx, run)
         ssp = S.state_specs(cfg, run)
-        ssh = S.state_shardings(cfg, mesh, rules)
+        ssh = S.state_shardings(cfg, mesh, rules, run)
         fn = jax.jit(step, in_shardings=(ssh, bsh),
                      out_shardings=(ssh, None), donate_argnums=(0,))
         lowered = fn.lower(ssp, bs)
@@ -158,7 +167,10 @@ def build_lowered(arch: str, shape_name: str, multi_pod: bool,
             "kind": kind, "n_devices": mesh.devices.size,
             "seq_len": shape.seq_len, "global_batch": shape.global_batch,
             "num_microbatches": run.num_microbatches,
-            "remat_policy": run.remat_policy}
+            "remat_policy": run.remat_policy,
+            # pre-compile placement estimate from the sharding trees —
+            # cross-check against compiled argument_size_in_bytes
+            "analytic": S.placement_report(cfg, shape, run, mesh, rules)}
     return lowered, meta
 
 
@@ -183,7 +195,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
         if hasattr(mem, attr):
             mem_rec[attr] = int(getattr(mem, attr))
 
-    cost = compiled.cost_analysis() or {}
+    cost = cost_dict(compiled)
     cost_rec = {k: float(v) for k, v in cost.items()
                 if isinstance(v, (int, float)) and k in
                 ("flops", "bytes accessed", "transcendentals",

@@ -1,19 +1,9 @@
-"""Production meshes.  Functions, not module constants — importing this
-module never touches jax device state."""
-from __future__ import annotations
-
-import jax
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    """Single pod: (data=16, model=16) = 256 chips.
-    Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the pod axis is pure
-    data parallelism (cross-pod traffic = one gradient all-reduce/step)."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-def make_host_mesh():
-    """1-device mesh for CPU smoke tests (same code path as production)."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+"""Back-compat shim: mesh construction moved into the distribution
+subsystem (``repro.dist.mesh``) so learners, the dry-run, and tests build
+meshes from one place."""
+from repro.dist.mesh import (  # noqa: F401
+    axis_sizes,
+    make_device_mesh,
+    make_host_mesh,
+    make_production_mesh,
+)

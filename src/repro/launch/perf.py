@@ -28,7 +28,7 @@ def measure(arch, shape, overrides, mb=None, csw=False, multi_pod=False):
     import jax.numpy as jnp
     from repro.configs import get_config, get_run_config
     from repro.dist.sharding import DEFAULT_RULES
-    from repro.launch.dryrun import build_lowered, parse_collectives
+    from repro.launch.dryrun import build_lowered, cost_dict, parse_collectives
     from repro.launch.analysis import _variant_cfg, _extrapolate
     from repro.models.layers import Ctx
     from repro.launch.mesh import make_production_mesh
@@ -69,7 +69,7 @@ def measure(arch, shape, overrides, mb=None, csw=False, multi_pod=False):
         lw, _ = _build(cfg_override=_variant_cfg(cfg, g), run_override=run1,
                        unroll=True)
         c = lw.compile()
-        cost = c.cost_analysis() or {}
+        cost = cost_dict(c)
         cs[g] = {"flops": float(cost.get("flops", 0)),
                  "bytes": float(cost.get("bytes accessed", 0)),
                  "transcendentals": float(cost.get("transcendentals", 0)),
@@ -79,6 +79,7 @@ def measure(arch, shape, overrides, mb=None, csw=False, multi_pod=False):
     rec = {
         "arch": arch, "shape": shape, "overrides": overrides, "mb": mb,
         "constrain_scan_weights": csw,
+        "analytic": meta.get("analytic"),
         "temp_GB": round(temp / 1e9, 2), "args_GB": round(arg / 1e9, 2),
         "t_compute_s": round(ex["flops"] / PEAK_FLOPS, 4),
         "t_memory_s": round(ex["bytes"] / HBM_BW, 4),

@@ -14,7 +14,12 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.dist.sharding import ShardingRules, DEFAULT_RULES, make_named_sharding
+from repro.dist.sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    make_named_sharding,
+    tree_shardings,
+)
 from repro.models import params as MP
 from repro.models.model import abstract_cache
 
@@ -78,12 +83,12 @@ def param_specs(cfg: ModelConfig, serve: bool = False) -> Tree:
 
 def param_shardings(cfg: ModelConfig, mesh: Mesh,
                     rules: ShardingRules = DEFAULT_RULES) -> Tree:
-    from repro.dist.sharding import tree_shardings
-    return tree_shardings(MP.abstract_params(cfg), mesh, rules)
+    return MP.param_shardings(cfg, mesh, rules)
 
 
 def state_specs(cfg: ModelConfig, run=None) -> Tree:
-    """Train-state ShapeDtypeStructs (m/v mirror the params)."""
+    """Train-state ShapeDtypeStructs (m/v — and, with gradient compression
+    on, the fp32 error-feedback residuals — mirror the params)."""
     from repro.configs.base import RunConfig
     run = run or RunConfig()
     ps = param_specs(cfg)
@@ -91,23 +96,32 @@ def state_specs(cfg: ModelConfig, run=None) -> Tree:
         s.shape, jnp.dtype(run.master_dtype) if len(s.shape) >= 2 else s.dtype)
     od = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(run.opt_dtype))
     ps_m = jax.tree.map(master, ps)
-    return {
+    out = {
         "params": ps_m,
         "opt": {"m": jax.tree.map(od, ps), "v": jax.tree.map(od, ps),
                 "count": jax.ShapeDtypeStruct((), jnp.int32)},
         "step": jax.ShapeDtypeStruct((), jnp.int32),
     }
+    if run.grad_compression != "none":
+        out["err"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), ps)
+    return out
 
 
 def state_shardings(cfg: ModelConfig, mesh: Mesh,
-                    rules: ShardingRules = DEFAULT_RULES) -> Tree:
+                    rules: ShardingRules = DEFAULT_RULES, run=None) -> Tree:
+    from repro.configs.base import RunConfig
+    run = run or RunConfig()
     psh = param_shardings(cfg, mesh, rules)
     rep = NamedSharding(mesh, P())
-    return {
+    out = {
         "params": psh,
         "opt": {"m": psh, "v": psh, "count": rep},
         "step": rep,
     }
+    if run.grad_compression != "none":
+        out["err"] = psh
+    return out
 
 
 def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tree:
@@ -118,7 +132,47 @@ def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tree:
 
 def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                     rules: ShardingRules = DEFAULT_RULES) -> Tree:
-    from repro.dist.sharding import tree_shardings
     B, S = shape.global_batch, shape.seq_len
     ab = abstract_cache(cfg, B, S, src_len=src_len_for(cfg, S))
     return tree_shardings(ab, mesh, rules)
+
+
+# ---------------------------------------------------------------------------
+# Analytic placement: per-device residency without compiling anything.
+# ---------------------------------------------------------------------------
+def sharded_bytes(spec_tree: Tree, shard_tree: Tree) -> int:
+    """Exact per-device bytes of a (ShapeDtypeStruct, NamedSharding) tree
+    pair — ``NamedSharding.shard_shape`` applies the same partitioning XLA
+    will, so this matches the compiled argument residency."""
+    import numpy as np
+    specs = jax.tree.leaves(spec_tree)
+    shards = jax.tree.leaves(shard_tree)
+    assert len(specs) == len(shards), (len(specs), len(shards))
+    total = 0
+    for s, h in zip(specs, shards):
+        shape = h.shard_shape(s.shape)
+        total += int(np.prod(shape, dtype=np.int64)) * jnp.dtype(s.dtype).itemsize
+    return total
+
+
+def placement_report(cfg: ModelConfig, shape: ShapeConfig, run, mesh: Mesh,
+                     rules: ShardingRules = DEFAULT_RULES) -> Dict[str, float]:
+    """Per-device GB by residency class for one (arch × shape × mesh) cell.
+
+    This is the number the scheduler wants *before* paying a compile: does
+    the cell fit HBM, and how is it split between state, cache, and batch?
+    """
+    out: Dict[str, float] = {}
+    kind = shape.kind
+    bs = batch_specs(cfg, shape, kind)
+    out["batch_gb"] = sharded_bytes(bs, batch_shardings(bs, mesh, rules)) / 1e9
+    if kind == "train":
+        out["state_gb"] = sharded_bytes(
+            state_specs(cfg, run), state_shardings(cfg, mesh, rules, run)) / 1e9
+    else:
+        out["params_gb"] = sharded_bytes(
+            param_specs(cfg, serve=True), param_shardings(cfg, mesh, rules)) / 1e9
+        out["cache_gb"] = sharded_bytes(
+            cache_specs(cfg, shape), cache_shardings(cfg, shape, mesh, rules)) / 1e9
+    out["resident_gb"] = round(sum(out.values()), 3)
+    return {k: round(v, 3) for k, v in out.items()}

@@ -203,13 +203,9 @@ def run_stack(
         # default.
         group_axes = None
         if ctx.mesh is not None and ctx.constrain_scan_weights:
-            from repro.models import params as _P
-            ab = _P.abstract_params(cfg)
-            ab_groups = ab.get(stack_name, {}).get("groups")
+            ab_groups = P.abstract_params(cfg).get(stack_name, {}).get("groups")
             if ab_groups is not None:
-                group_axes = jax.tree.map(
-                    lambda a: a.logical_axes[1:], ab_groups,
-                    is_leaf=lambda x: isinstance(x, _P.ParamAb))
+                group_axes = P.tree_logical_axes(ab_groups, drop_leading=1)
 
         def body(carry, xs):
             h, aux = carry

@@ -292,11 +292,26 @@ def shape_dtype_tree(tree: Tree):
                         is_leaf=lambda x: isinstance(x, ParamAb))
 
 
+def tree_logical_axes(tree: Tree, drop_leading: int = 0) -> Tree:
+    """Per-leaf logical-axis tuples (``drop_leading=1`` strips the scan
+    ``layers`` dim — what the in-loop weight slices actually carry)."""
+    return jax.tree.map(lambda ab: ab.logical_axes[drop_leading:], tree,
+                        is_leaf=lambda x: isinstance(x, ParamAb))
+
+
+def param_shardings(cfg: ModelConfig, mesh, rules=None) -> Tree:
+    """NamedSharding tree for the whole model, inferred from the abstract
+    tree by repro.dist (no arrays allocated)."""
+    from repro.dist.sharding import DEFAULT_RULES, tree_shardings
+    return tree_shardings(abstract_params(cfg), mesh,
+                          DEFAULT_RULES if rules is None else rules)
+
+
 def init_params(cfg: ModelConfig, key: jax.Array) -> Tree:
     """Concrete init.  Each leaf gets a key folded from its tree path, so
     adding/removing an unrelated leaf never reshuffles other leaves."""
     ab = abstract_params(cfg)
-    leaves, treedef = jax.tree.flatten_with_path(
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
         ab, is_leaf=lambda x: isinstance(x, ParamAb))
 
     def leaf_key(path) -> jax.Array:
@@ -332,7 +347,7 @@ def count_params(cfg: ModelConfig, active_only: bool = False,
     convention counts matmul-participating non-embedding params)."""
     ab = abstract_params(cfg)
     total = 0
-    for path, leaf in jax.tree.flatten_with_path(
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
             ab, is_leaf=lambda x: isinstance(x, ParamAb))[0]:
         names = [str(getattr(p, "key", "")) for p in path]
         if not include_embed and (names[0] in ("embed", "lm_head")):

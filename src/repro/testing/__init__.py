@@ -1,0 +1,3 @@
+"""Test-support utilities that ship with the library (the CI container
+is hermetic — anything the suite needs beyond jax/numpy/pytest must live
+here, stubbed or gated, never pip-installed at test time)."""

@@ -15,7 +15,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, RunConfig
-from repro.dist.compression import compress_grads, init_error_buffers
+from repro.dist.compression import (
+    CompressionConfig,
+    compress_grads,
+    init_error_buffers,
+    resolve_compression,
+)
 from repro.models.layers import Ctx
 from repro.models.model import forward, init_cache
 from repro.models.params import init_params
@@ -49,9 +54,17 @@ def loss_fn(
 # ---------------------------------------------------------------------------
 # Train step
 # ---------------------------------------------------------------------------
+def _compression_for(run: RunConfig, flag) -> Optional[CompressionConfig]:
+    """The explicit argument wins (None = unspecified, fall back to the
+    run config's knob; False/"none" = explicit opt-out)."""
+    if flag is None:
+        return resolve_compression(run.grad_compression)
+    return resolve_compression(flag)
+
+
 def init_train_state(cfg: ModelConfig, key: jax.Array,
                      run: Optional[RunConfig] = None,
-                     grad_compression: bool = False) -> TrainState:
+                     grad_compression=None) -> TrainState:
     run = run or RunConfig()
     params = init_params(cfg, key)
     if run.master_dtype != "float32":
@@ -62,7 +75,7 @@ def init_train_state(cfg: ModelConfig, key: jax.Array,
         "opt": adamw_init(params, jnp.dtype(run.opt_dtype)),
         "step": jnp.zeros((), jnp.int32),
     }
-    if grad_compression:
+    if _compression_for(run, grad_compression) is not None:
         state["err"] = init_error_buffers(params)
     return state
 
@@ -72,13 +85,14 @@ def make_train_step(
     ctx: Ctx,
     run: RunConfig,
     opt_cfg: Optional[AdamWConfig] = None,
-    grad_compression: bool = False,
+    grad_compression=None,
 ) -> Callable[[TrainState, Tree], Tuple[TrainState, Dict[str, jax.Array]]]:
     opt_cfg = opt_cfg or AdamWConfig(
         learning_rate=run.learning_rate, weight_decay=run.weight_decay,
         grad_clip_norm=run.grad_clip_norm, warmup_steps=run.warmup_steps,
         total_steps=run.total_steps)
     n_mb = run.num_microbatches
+    comp = _compression_for(run, grad_compression)
 
     def loss_for_grad(params, mb):
         return loss_fn(cfg, params, mb, ctx, run.remat_policy)
@@ -114,8 +128,11 @@ def make_train_step(
             metrics = jax.tree.map(lambda m: m.mean(), ms)
 
         new_state = dict(state)
-        if grad_compression:
-            grads, new_state["err"] = compress_grads(grads, state["err"])
+        if comp is not None:
+            # The all-reduced gradient is what the wire delivers: quantize
+            # (+ carried error) here, before clip/optimizer, so the update
+            # math sees exactly the transported values.
+            grads, new_state["err"] = compress_grads(grads, state["err"], comp)
         new_p, new_opt, opt_metrics = adamw_update(
             opt_cfg, grads, params, state["opt"])
         new_state.update(params=new_p, opt=new_opt, step=state["step"] + 1)

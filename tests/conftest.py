@@ -6,3 +6,8 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# The CI container ships no hypothesis; fall back to the deterministic
+# in-repo stub so property tests still run (see repro/testing).
+from repro.testing import hypothesis_stub
+hypothesis_stub.install()

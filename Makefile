@@ -1,0 +1,18 @@
+# Convenience entry points.  `make verify` is the tier-1 gate (same command
+# CI runs); see ROADMAP.md.
+
+PY ?= python
+
+.PHONY: verify serve-smoke dryrun
+
+verify:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+serve-smoke:
+	PYTHONPATH=src $(PY) -m repro.launch.serve --reduced --batch 2 \
+		--prompt-len 16 --gen 8
+	PYTHONPATH=src $(PY) -m repro.launch.serve --reduced --batch 2 \
+		--prompt-len 16 --gen 8 --continuous --requests 4
+
+dryrun:
+	PYTHONPATH=src $(PY) -m repro.launch.dryrun --all

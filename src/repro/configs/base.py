@@ -99,6 +99,15 @@ class ModelConfig:
     frontend: str = "none"            # none | audio | vision
     frontend_tokens: int = 0          # precomputed embeddings prepended (vision)
 
+    # --- serving KV-cache layout ---------------------------------------------
+    # ``dense``: one (B, K, S_max, hd) buffer per layer (the fallback).
+    # ``paged``: global-attention layers keep a shared pool of fixed-size
+    # pages plus per-sequence page tables (vLLM-style); ring-buffer (local)
+    # and MLA-latent caches stay dense — they are already bounded.  Decode
+    # logits are identical between the two layouts (tested).
+    cache_layout: str = "dense"       # dense | paged
+    page_size: int = 128              # tokens per KV page (paged layout)
+
     # --- numerics / misc ------------------------------------------------------
     norm_eps: float = 1e-6
     act: str = "silu"                 # silu | gelu_tanh
@@ -188,6 +197,7 @@ class ModelConfig:
             num_encoder_layers=2 if self.is_encoder_decoder else 0,
             frontend_tokens=min(self.frontend_tokens, 4),
             pad_vocab_multiple=32,
+            page_size=8,                      # page on tiny CPU sequences too
         )
 
     # ------------------------------------------------------------------
@@ -259,6 +269,11 @@ class RunConfig:
     # "topk") — the paper's efficiency-vs-dependability tradeoff, resolved
     # by repro.dist.compression.resolve_compression.
     grad_compression: str = "none"
+    # Expected mean KV-cache occupancy for *paged* decode cells.  Continuous
+    # batching keeps the pool near a target utilization instead of reserving
+    # worst-case S for every sequence; the scheduler admits a cell by this
+    # allocated-page budget (launch.specs.decode_page_budget), not by S_max.
+    page_occupancy: float = 1.0
 
 
 # Registry -------------------------------------------------------------------

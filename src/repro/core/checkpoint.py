@@ -57,6 +57,13 @@ def _unflatten(flat: Dict[str, np.ndarray]) -> Any:
 
 class CheckpointManager:
     def __init__(self, store: ObjectStore, job_id: str, keep_last: int = 3):
+        if not job_id or SEP in job_id:
+            # a slash would fold extra levels into the key layout and break
+            # step parsing / prefix GC
+            raise ValueError(f"invalid job_id {job_id!r}: must be non-empty "
+                             f"and must not contain {SEP!r}")
+        if keep_last < 0:
+            raise ValueError(f"keep_last must be >= 0, got {keep_last}")
         self.store = store
         self.job_id = job_id
         self.keep_last = keep_last
@@ -80,15 +87,20 @@ class CheckpointManager:
                 "sha256": digest, "bytes": len(data)}
             total += len(data)
         self.store.put_json_atomic(f"{base}/manifest", manifest)
-        self._gc()
+        self._gc(current=step)
         return total
 
     # ------------------------------------------------------------------
     def steps(self) -> List[int]:
         out = []
-        for p in self.store.list_prefix(f"ckpt/{self.job_id}/"):
-            if p.endswith("/manifest"):
-                out.append(int(p.split("/")[2]))
+        prefix = f"ckpt/{self.job_id}/"
+        for p in self.store.list_prefix(prefix):
+            # parse relative to the listing prefix (an absolute split index
+            # would mis-parse if the layout ever gains/loses a level)
+            rest = p[len(prefix):]
+            head, _, tail = rest.partition("/")
+            if tail.rstrip("/") == "manifest" and head.isdigit():
+                out.append(int(head))
         return sorted(set(out))
 
     def latest_valid_step(self) -> Optional[int]:
@@ -130,7 +142,15 @@ class CheckpointManager:
                 return s, _unflatten(flat)
         return None
 
-    def _gc(self) -> None:
+    def _gc(self, current: Optional[int] = None) -> None:
+        """Retention: keep the newest ``keep_last`` checkpoints, always
+        including the just-saved ``current``.  ``keep_last=0`` keeps *only*
+        the current one (a plain ``steps[:-0]`` slice would be empty and
+        delete nothing — the historical bug)."""
         steps = self.steps()
-        for s in steps[:-self.keep_last]:
-            self.store.delete_prefix(self._base(s))
+        protect = set(steps[-self.keep_last:]) if self.keep_last > 0 else set()
+        if current is not None:
+            protect.add(current)
+        for s in steps:
+            if s not in protect:
+                self.store.delete_prefix(self._base(s))

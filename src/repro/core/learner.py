@@ -83,6 +83,25 @@ def make_learner_proc(platform, job_id: str, manifest: JobManifest, idx: int):
         if manifest.extras.get("recovery_mode", "checkpoint") == "rejoin" and \
                 max(group_steps) > 0:
             step = max(group_steps)           # catch up from peers (PS-style)
+            if payload is not None:
+                # A restarted container has no parameters in memory: fetch
+                # the peers' current snapshot from the shared volume, or
+                # fall back to the latest checkpoint.  Jump-starting ``step``
+                # without restoring would make the first payload.step() crash
+                # (state=None) — or worse, silently pretend the parameters
+                # caught up.
+                snap = vol.read("param_snapshot")
+                if snap is not None and snap.get("tree") is not None:
+                    payload.restore(snap["tree"])
+                    step = int(snap["step"])
+                else:
+                    loaded = ckpt.load()
+                    if loaded is not None:
+                        payload.restore(loaded[1])
+                        step = int(loaded[0])   # params only caught up to here
+                    else:
+                        payload.restore(None)
+                        step = 0
             vol.append(f"log/{idx}", f"[{sim.now:.2f}] rejoined at step {step}")
         else:
             loaded = ckpt.load()
@@ -124,8 +143,13 @@ def make_learner_proc(platform, job_id: str, manifest: JobManifest, idx: int):
                 if j == idx or vol.read(f"exit/{j}") is not None:
                     continue
                 pr = vol.read(f"progress/{j}")
-                if pr is None or (sim.now - pr["t"]) > \
-                        HEARTBEAT_STALE * manifest.step_time_s + 2.0:
+                allow = HEARTBEAT_STALE * manifest.step_time_s + 2.0
+                if pr is not None and pr.get("saving"):
+                    # peer announced a checkpoint upload: extend the lease by
+                    # the worst-case save time so a slow save (or a short
+                    # checkpoint interval) doesn't read as a dead peer
+                    allow += SAVE_TIME[1]
+                if pr is None or (sim.now - pr["t"]) > allow:
                     stale = True
             if stale:
                 vol.write(f"progress/{idx}",
@@ -140,6 +164,13 @@ def make_learner_proc(platform, job_id: str, manifest: JobManifest, idx: int):
             yield manifest.step_time_s
             step += 1
             vol.write(f"progress/{idx}", {"step": step, "t": sim.now})
+            if payload is not None and idx == 0 and \
+                    manifest.extras.get("recovery_mode") == "rejoin":
+                # publish the current parameters for rejoin-mode peers
+                # (PS-style fetch through the shared volume; cheap — the
+                # snapshot holds references, not copies)
+                vol.write("param_snapshot",
+                          {"step": step, "tree": payload.snapshot()})
             if step % 50 == 0:
                 vol.append(f"log/{idx}", f"[{sim.now:.2f}] step {step}")
 
@@ -153,7 +184,13 @@ def make_learner_proc(platform, job_id: str, manifest: JobManifest, idx: int):
                 ckpt.save(step, tree)
                 last_ckpt_t = sim.now
                 vol.append(f"log/{idx}", f"[{sim.now:.2f}] checkpoint @ {step}")
+                # heartbeat with a save lease, then refresh once the upload
+                # finishes — peers must not mistake the save window for a
+                # dead chief and spuriously stall the gang
+                vol.write(f"progress/{idx}",
+                          {"step": step, "t": sim.now, "saving": True})
                 yield sim.rng.uniform(*SAVE_TIME)
+                vol.write(f"progress/{idx}", {"step": step, "t": sim.now})
 
         # -- orderly exit: write exit code to the shared volume --------------
         vol.write(f"exit/{idx}", 0)

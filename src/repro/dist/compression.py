@@ -72,10 +72,20 @@ def _int8_leaf(t: jax.Array, cfg: CompressionConfig) -> jax.Array:
 
 
 def _topk_leaf(t: jax.Array, cfg: CompressionConfig) -> jax.Array:
+    """Keep (at most) the k largest-magnitude entries.
+
+    Selecting by index — not by thresholding ``|t| >= top_k(...)[-1]`` —
+    matters twice over: a threshold of 0 (any tensor whose (1-ratio)
+    quantile is exactly 0, common for sparse gradients) would degenerate
+    top-k into the identity with zero residual, and magnitude ties at the
+    threshold would send more than k entries.  Zero entries are excluded
+    even when selected: sending a zero is sending nothing.
+    """
     k = max(1, int(round(t.size * cfg.topk_ratio)))
-    mag = jnp.abs(t).ravel()
-    thresh = jax.lax.top_k(mag, k)[0][-1]
-    return jnp.where(jnp.abs(t) >= thresh, t, jnp.zeros_like(t))
+    flat = t.ravel()
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    keep = jnp.zeros(flat.shape, bool).at[idx].set(vals > 0)
+    return jnp.where(keep.reshape(t.shape), t, jnp.zeros_like(t))
 
 
 def compress_grads(

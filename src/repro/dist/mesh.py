@@ -31,6 +31,17 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
+def make_abstract_production_mesh(*, multi_pod: bool = False):
+    """AbstractMesh twin of :func:`make_production_mesh` — carries only axis
+    names/sizes, so placement analytics (``launch.specs.placement_report``)
+    can price the 256/512-chip meshes on a single-CPU test host.
+    ``NamedSharding.shard_shape`` works on it; compiling does not."""
+    from jax.sharding import AbstractMesh
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def make_host_mesh() -> Mesh:
     """1-device mesh for CPU smoke tests (same code path as production)."""
     return jax.make_mesh((1, 1), ("data", "model"))

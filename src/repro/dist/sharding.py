@@ -76,7 +76,11 @@ class ShardingRules:
         return ShardingRules(tuple(sorted(table.items())))
 
 
-def _mesh_sizes(mesh: Mesh) -> Dict[str, int]:
+def _mesh_sizes(mesh) -> Dict[str, int]:
+    # ``axis_sizes`` covers both concrete Mesh and AbstractMesh — the latter
+    # lets placement analytics price a 256-chip mesh on a 1-CPU test host.
+    if hasattr(mesh, "axis_sizes"):
+        return dict(zip(mesh.axis_names, mesh.axis_sizes))
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
@@ -101,7 +105,25 @@ DEFAULT_RULES = ShardingRules().override(
     cache_batch=("pod", "data"),
     seq=(),
     resid_seq=(),            # override to ("model",) for Megatron-SP residuals
-    kv_seq=(),
+    # KV-cache placement (README §Serving cache placement):
+    #   * ``kv_seq``      — sequence dim of *global* position-indexed caches.
+    #     Sharded over the tensor axis; when ``kv_heads`` already consumed it
+    #     (divisible head count) the use-once rule drops it and the cache is
+    #     head-sharded instead.  Either way the 32k decode cache stops being
+    #     replicated over the model axis.
+    #   * ``window_seq``  — slot dim of ring-buffer (sliding-window) caches.
+    #     NEVER sharded: the ``pos % window`` scatter wraps around, so a
+    #     sharded ring would scatter across devices every step.  Ring buffers
+    #     are batch-sharded through ``cache_batch`` only.
+    #   * ``cache_pages`` — physical-page dim of the paged pool.  Pages have
+    #     no batch dim (the pool is shared), so they shard over batch-ish
+    #     axes AND the tensor axis; the serving allocator keeps a sequence's
+    #     pages inside its own data shard (launch.serve.PagePool partitions
+    #     its free lists per shard — spec-level invariants are checked by
+    #     check_cache_locality).
+    kv_seq=("tensor", "model"),
+    window_seq=(),
+    cache_pages=("pod", "data", "tensor", "model"),
     embed_act=(),
     vocab_act=("tensor", "model"),
     # parameter axes
@@ -197,6 +219,55 @@ def _shard_factor(spec: PartitionSpec, sizes: Dict[str, int]) -> int:
         for ax in (entry if isinstance(entry, tuple) else (entry,)):
             f *= sizes[ax]
     return f
+
+
+def _spec_entries(spec: PartitionSpec, ndim: int) -> Tuple:
+    entries = tuple(spec) + (None,) * (ndim - len(tuple(spec)))
+    return entries
+
+
+def check_cache_locality(tree, mesh, rules: ShardingRules = DEFAULT_RULES) -> Dict[str, PartitionSpec]:
+    """Well-formedness of a KV-cache sharding: decode gather/scatter must
+    stay shard-local.
+
+    Enforced invariants, per abstract cache leaf:
+
+    * ``window_seq`` dims are replicated — the ring buffer's ``pos % window``
+      scatter wraps, so a sharded ring would cross shards every decode step;
+    * unnamed (``None``) dims — per-slot position metadata, page tables'
+      page-index dim, the within-page token dim of a page pool — are
+      replicated: they are read in full every step.
+
+    These are *spec-level* invariants.  Which physical page a sequence's
+    table points at is runtime data, so page→shard locality is enforced by
+    the serving allocator instead (``launch.serve.PagePool`` partitions its
+    free lists per data shard).
+
+    Returns ``{leaf_path: spec}`` for introspection; raises ``ValueError``
+    on the first violation.
+    """
+    leaves, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=is_abstract_leaf)
+    out: Dict[str, PartitionSpec] = {}
+    for path, ab in leaves:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        spec = logical_to_spec(ab.logical_axes, ab.shape, mesh, rules)
+        entries = _spec_entries(spec, len(ab.shape))
+        for lax_name, entry in zip(ab.logical_axes, entries):
+            axes = () if entry is None else (
+                entry if isinstance(entry, tuple) else (entry,))
+            if lax_name == "window_seq" and axes:
+                raise ValueError(
+                    f"cache leaf {name!r}: ring-buffer slot dim is sharded "
+                    f"over {axes} — the pos%window scatter would cross "
+                    f"shards every decode step; map 'window_seq' to ()")
+            if lax_name is None and axes:
+                raise ValueError(
+                    f"cache leaf {name!r}: metadata dim sharded over {axes} "
+                    f"— pos/page-table metadata must be replicated")
+        out[name] = spec
+    return out
 
 
 def tree_shard_bytes(

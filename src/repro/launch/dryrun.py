@@ -146,8 +146,8 @@ def build_lowered(arch: str, shape_name: str, multi_pod: bool,
         step = make_prefill_step(cfg, ctx)
         psp = S.param_specs(cfg, serve=True)
         psh = S.param_shardings(cfg, mesh, rules)
-        csp = S.cache_specs(cfg, shape)
-        csh = S.cache_shardings(cfg, shape, mesh, rules)
+        csp = S.cache_specs(cfg, shape, run)
+        csh = S.cache_shardings(cfg, shape, mesh, rules, run)
         fn = jax.jit(step, in_shardings=(psh, bsh, csh),
                      out_shardings=(None, csh), donate_argnums=(2,))
         lowered = fn.lower(psp, bs, csp)
@@ -155,8 +155,8 @@ def build_lowered(arch: str, shape_name: str, multi_pod: bool,
         step = make_decode_step(cfg, ctx)
         psp = S.param_specs(cfg, serve=True)
         psh = S.param_shardings(cfg, mesh, rules)
-        csp = S.cache_specs(cfg, shape)
-        csh = S.cache_shardings(cfg, shape, mesh, rules)
+        csp = S.cache_specs(cfg, shape, run)
+        csh = S.cache_shardings(cfg, shape, mesh, rules, run)
         fn = jax.jit(step, in_shardings=(psh, bsh, csh, rep),
                      out_shardings=(None, csh), donate_argnums=(2,))
         lowered = fn.lower(psp, bs, csp,

@@ -17,11 +17,12 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.dist.sharding import (
     DEFAULT_RULES,
     ShardingRules,
+    check_cache_locality,
     make_named_sharding,
     tree_shardings,
 )
 from repro.models import params as MP
-from repro.models.model import abstract_cache
+from repro.models.model import abstract_cache, num_pages
 
 Tree = Dict[str, Any]
 
@@ -124,16 +125,35 @@ def state_shardings(cfg: ModelConfig, mesh: Mesh,
     return out
 
 
-def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tree:
+def decode_page_budget(cfg: ModelConfig, shape: ShapeConfig,
+                       run=None) -> Optional[int]:
+    """Pool size in pages for a paged decode cell: worst case scaled by the
+    run's expected occupancy.  Continuous batching keeps sequences at mixed
+    fill levels, so the scheduler admits the cell by this *allocated*-page
+    budget instead of reserving ``S_max`` per sequence.  None for dense."""
+    if cfg.cache_layout != "paged":
+        return None
     B, S = shape.global_batch, shape.seq_len
-    ab = abstract_cache(cfg, B, S, src_len=src_len_for(cfg, S))
-    return MP.shape_dtype_tree(ab)
+    occ = getattr(run, "page_occupancy", 1.0) if run is not None else 1.0
+    worst = B * num_pages(S, cfg.page_size)
+    return max(B, int(-(-worst * occ // 1)))
+
+
+def _cache_ab(cfg: ModelConfig, shape: ShapeConfig, run=None) -> Tree:
+    B, S = shape.global_batch, shape.seq_len
+    return abstract_cache(cfg, B, S, src_len=src_len_for(cfg, S),
+                          page_budget=decode_page_budget(cfg, shape, run))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, run=None) -> Tree:
+    return MP.shape_dtype_tree(_cache_ab(cfg, shape, run))
 
 
 def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
-                    rules: ShardingRules = DEFAULT_RULES) -> Tree:
-    B, S = shape.global_batch, shape.seq_len
-    ab = abstract_cache(cfg, B, S, src_len=src_len_for(cfg, S))
+                    rules: ShardingRules = DEFAULT_RULES, run=None) -> Tree:
+    ab = _cache_ab(cfg, shape, run)
+    # decode gather/scatter must stay shard-local; raises on a bad override
+    check_cache_locality(ab, mesh, rules)
     return tree_shardings(ab, mesh, rules)
 
 
@@ -173,6 +193,10 @@ def placement_report(cfg: ModelConfig, shape: ShapeConfig, run, mesh: Mesh,
         out["params_gb"] = sharded_bytes(
             param_specs(cfg, serve=True), param_shardings(cfg, mesh, rules)) / 1e9
         out["cache_gb"] = sharded_bytes(
-            cache_specs(cfg, shape), cache_shardings(cfg, shape, mesh, rules)) / 1e9
+            cache_specs(cfg, shape, run),
+            cache_shardings(cfg, shape, mesh, rules, run)) / 1e9
     out["resident_gb"] = round(sum(out.values()), 3)
+    if kind != "train" and cfg.cache_layout == "paged":
+        # the admission-control number: pages the scheduler must find free
+        out["cache_pages"] = float(decode_page_budget(cfg, shape, run))
     return {k: round(v, 3) for k, v in out.items()}

@@ -108,13 +108,16 @@ def decode_attention_jnp(
     q: jax.Array,          # (B, 1, H, hd)
     k: jax.Array,          # (B, K, Skv, hd)  cache layout, already rotated
     v: jax.Array,          # (B, K, Skv, vd)
-    pos_k: jax.Array,      # (Skv,) absolute positions; -1 = invalid slot
-    pos_q: jax.Array,      # scalar
+    pos_k: jax.Array,      # (Skv,) or (B, Skv) absolute positions; -1 = invalid
+    pos_q: jax.Array,      # scalar, or (B,) per-sequence positions
     *,
     scale: float,
     window: int = 0,
     logit_cap: float = 0.0,
 ) -> jax.Array:
+    """One-token attention against a cache.  ``pos_k``/``pos_q`` may carry a
+    leading batch dim (continuous batching decodes sequences at different
+    positions); 1-D / scalar forms broadcast — the lockstep fast path."""
     B, _, H, hd = q.shape
     K = k.shape[1]
     G = H // K
@@ -122,13 +125,52 @@ def decode_attention_jnp(
     qg = q.reshape(B, K, G, hd).astype(jnp.float32) * scale
     s = jnp.einsum("bkgd,bktd->bkgt", qg, k.astype(jnp.float32))
     s = softcap(s, logit_cap)
-    valid = (pos_k >= 0) & (pos_k <= pos_q)
+    pk = pos_k if pos_k.ndim == 2 else pos_k[None, :]          # (B|1, Skv)
+    pq = jnp.reshape(jnp.asarray(pos_q, jnp.int32), (-1, 1))   # (B|1, 1)
+    valid = (pk >= 0) & (pk <= pq)
     if window:
-        valid = valid & (pos_q - pos_k < window)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        valid = valid & (pq - pk < window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
     return out.reshape(B, 1, H, vd).astype(q.dtype)
+
+
+def decode_attention_paged(
+    q: jax.Array,            # (B, 1, H, hd)
+    k_pages: jax.Array,      # (P, K, page_size, hd) shared physical pool
+    v_pages: jax.Array,      # (P, K, page_size, vd)
+    page_table: jax.Array,   # (B, pages_per_seq) int32; -1 = unallocated
+    pos_q: jax.Array,        # scalar or (B,) current position per sequence
+    *,
+    scale: float,
+    logit_cap: float = 0.0,
+) -> jax.Array:
+    """Paged decode attention: walk each sequence's page table, gather its
+    pages from the pool, and run the same masked one-token softmax as the
+    dense path.  Slot ``t`` of a sequence holds position ``t`` (global
+    caches are position-indexed), so validity is ``t <= pos_q`` AND the
+    page being allocated — identical math to the dense layout, which is
+    what makes the paged/dense equivalence test exact.
+
+    This is the *reference* walk: the gather materializes the table-bounded
+    (B, pps·ps, K, hd) view, so per-step transient memory is bounded by the
+    page-table length, not by what's resident.  The perf follow-up (ROADMAP)
+    is a per-page online-softmax kernel that never materializes it."""
+    B = q.shape[0]
+    _, K, ps, hd = k_pages.shape
+    pps = page_table.shape[1]
+    pt = jnp.maximum(page_table, 0)                  # clamp: masked below
+    kb = k_pages[pt]                                 # (B, pps, K, ps, hd)
+    vb = v_pages[pt]
+    T = pps * ps
+    kb = kb.transpose(0, 2, 1, 3, 4).reshape(B, K, T, kb.shape[-1])
+    vb = vb.transpose(0, 2, 1, 3, 4).reshape(B, K, T, vb.shape[-1])
+    pos_k = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    alloc = jnp.repeat(page_table >= 0, ps, axis=1)  # (B, T)
+    pos_k = jnp.where(alloc, pos_k, -1)
+    return decode_attention_jnp(q, kb, vb, pos_k, pos_q, scale=scale,
+                                logit_cap=logit_cap)
 
 
 # ---------------------------------------------------------------------------
@@ -209,16 +251,31 @@ def gqa_attention(
                     logit_cap=cfg.attn_logit_softcap,
                     q_block=ctx.attn_q_block, kv_block=ctx.attn_kv_block)
             if cache is not None:       # prefill: write the kv cache
-                new_cache = _write_full_kv(cache, k, v, pos, window)
+                if "k_pages" in cache:
+                    new_cache = _write_prefill_paged(cache, k, v)
+                else:
+                    new_cache = _write_full_kv(cache, k, v, pos, window)
     else:  # decode, self-attention
-        q = apply_rope(q, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
+        # pos: scalar (lockstep batch) or (B,) per-sequence positions
+        # (continuous batching; inactive slots carry -1).
+        pos_r = jnp.reshape(pos, (-1, 1)) if pos.ndim else pos[None]
+        q = apply_rope(q, pos_r, cfg.rope_theta)
         if not is_cross:
-            k = apply_rope(k, jnp.reshape(pos, (1,)), cfg.rope_theta)
-            new_cache, k_all, v_all, pos_all = _update_decode_kv(
-                cache, k, v, pos, window)
-            out = decode_attention_jnp(
-                q, k_all, v_all, pos_all, pos, scale=scale, window=window,
-                logit_cap=cfg.attn_logit_softcap)
+            k = apply_rope(k, pos_r, cfg.rope_theta)
+            if "k_pages" in cache:
+                assert not window, \
+                    "paged layout covers global layers; local layers ring"
+                new_cache = _update_decode_kv_paged(cache, k, v, pos)
+                out = decode_attention_paged(
+                    q, new_cache["k_pages"], new_cache["v_pages"],
+                    new_cache["page_table"], pos, scale=scale,
+                    logit_cap=cfg.attn_logit_softcap)
+            else:
+                new_cache, k_all, v_all, pos_all = _update_decode_kv(
+                    cache, k, v, pos, window)
+                out = decode_attention_jnp(
+                    q, k_all, v_all, pos_all, pos, scale=scale, window=window,
+                    logit_cap=cfg.attn_logit_softcap)
         else:
             if fresh_kv:   # cross-attn decode without a prefilled cache
                 k = k.transpose(0, 2, 1, 3)
@@ -236,8 +293,10 @@ def gqa_attention(
 def _write_full_kv(cache: Cache, k, v, pos, window: int) -> Cache:
     """Prefill: write rotated K/V into the cache buffer.
 
-    Cache layout (B, K, S_max, hd).  Global cache is position-indexed; local
-    cache keeps a ring of ``window`` slots — slot = pos % window."""
+    Cache layout (B, K, S_max, hd).  Global cache is position-indexed with a
+    shared ``pos (S_max,)`` slot map (prefill is lockstep); local cache keeps
+    a ring of ``window`` slots with a *per-sequence* ``pos (B, W)`` map —
+    slot = pos % window."""
     S_max = cache["k"].shape[2]
     k = k.transpose(0, 2, 1, 3)      # (B,S,K,hd) -> (B,K,S,hd)
     v = v.transpose(0, 2, 1, 3)
@@ -248,7 +307,7 @@ def _write_full_kv(cache: Cache, k, v, pos, window: int) -> Cache:
         slots = pos % window
         ck = cache["k"].at[:, :, slots].set(k.astype(cache["k"].dtype))
         cv = cache["v"].at[:, :, slots].set(v.astype(cache["v"].dtype))
-        cp = cache["pos"].at[slots].set(pos.astype(jnp.int32))
+        cp = cache["pos"].at[:, slots].set(pos[None, :].astype(jnp.int32))
         return {"k": ck, "v": cv, "pos": cp}
     ck = jax.lax.dynamic_update_slice_in_dim(
         cache["k"], k.astype(cache["k"].dtype), pos[0], axis=2)
@@ -259,19 +318,82 @@ def _write_full_kv(cache: Cache, k, v, pos, window: int) -> Cache:
     return {"k": ck, "v": cv, "pos": cp}
 
 
+def _write_prefill_paged(cache: Cache, k, v) -> Cache:
+    """Prefill into the paged layout: walk logical pages 0..ceil(S0/ps)-1 of
+    each sequence's page table and write the K/V chunks into the pool.
+    ``k, v`` arrive as (B, S0, K, hd), rotated; prefill always starts at
+    position 0, so the page loop is static."""
+    kp, vp, pt = cache["k_pages"], cache["v_pages"], cache["page_table"]
+    ps = kp.shape[2]
+    S0 = k.shape[1]
+    k = k.transpose(0, 2, 1, 3)      # (B, K, S0, hd)
+    v = v.transpose(0, 2, 1, 3)
+    for i in range((S0 + ps - 1) // ps):
+        lo, hi = i * ps, min((i + 1) * ps, S0)
+        phys = jnp.maximum(pt[:, i], 0)              # (B,) physical pages
+        kp = kp.at[phys, :, :hi - lo].set(k[:, :, lo:hi].astype(kp.dtype))
+        vp = vp.at[phys, :, :hi - lo].set(v[:, :, lo:hi].astype(vp.dtype))
+    return {"k_pages": kp, "v_pages": vp, "page_table": pt}
+
+
 def _update_decode_kv(cache: Cache, k, v, pos, window: int):
     """Insert one token's K/V; return (new_cache, k_all, v_all, pos_all).
-    ``k, v`` arrive as (B, 1, K, hd); cache layout is (B, K, S, hd)."""
-    slot = (pos % window) if window and cache["k"].shape[2] == window else pos
+    ``k, v`` arrive as (B, 1, K, hd); cache layout is (B, K, S, hd).
+
+    ``pos`` may be per-sequence (B,) for ring buffers (continuous batching;
+    inactive slots carry -1 and only dirty their own row).  Dense *global*
+    caches are lockstep-only — per-sequence positions require the paged
+    layout, which keeps the scatter per-row by construction."""
+    ring = bool(window) and cache["k"].shape[2] == window
     k = k.transpose(0, 2, 1, 3)
     v = v.transpose(0, 2, 1, 3)
+    if pos.ndim == 1:
+        if not ring:
+            raise NotImplementedError(
+                "per-sequence decode positions on a dense global cache; "
+                "use cache_layout='paged' for continuous batching")
+        B = k.shape[0]
+        b = jnp.arange(B)
+        slot = jnp.maximum(pos, 0) % window
+        ck = cache["k"].at[b, :, slot].set(k[:, :, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[b, :, slot].set(v[:, :, 0].astype(cache["v"].dtype))
+        cp = cache["pos"].at[b, slot].set(pos.astype(jnp.int32))
+        return {"k": ck, "v": cv, "pos": cp}, ck, cv, cp
+    slot = (pos % window) if ring else pos
     ck = jax.lax.dynamic_update_slice_in_dim(
         cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
     cv = jax.lax.dynamic_update_slice_in_dim(
         cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
-    cp = jax.lax.dynamic_update_slice_in_dim(
-        cache["pos"], jnp.reshape(pos, (1,)).astype(jnp.int32), slot, axis=0)
+    if cache["pos"].ndim == 2:       # ring: per-sequence (B, W) slot map
+        upd = jnp.broadcast_to(jnp.reshape(pos, (1, 1)),
+                               (cache["pos"].shape[0], 1)).astype(jnp.int32)
+        cp = jax.lax.dynamic_update_slice_in_dim(cache["pos"], upd, slot,
+                                                 axis=1)
+    else:                            # global: shared (S,) slot map
+        cp = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.reshape(pos, (1,)).astype(jnp.int32), slot,
+            axis=0)
     return {"k": ck, "v": cv, "pos": cp}, ck, cv, cp
+
+
+def _update_decode_kv_paged(cache: Cache, k, v, pos) -> Cache:
+    """Insert one token's K/V into the page pool.  ``k, v`` arrive as
+    (B, 1, K, hd); ``pos`` is scalar or (B,).  Rows with pos < 0 (inactive
+    slots) and unallocated page-table entries scatter out of bounds and are
+    dropped — the pool needs no scratch page, so its size stays mesh-
+    divisible."""
+    kp, vp, pt = cache["k_pages"], cache["v_pages"], cache["page_table"]
+    B = k.shape[0]
+    ps = kp.shape[2]
+    posb = jnp.broadcast_to(jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,)),
+                            (B,))
+    posc = jnp.maximum(posb, 0)
+    entry = jnp.take_along_axis(pt, (posc // ps)[:, None], axis=1)[:, 0]
+    phys = jnp.where((posb >= 0) & (entry >= 0), entry, kp.shape[0])
+    off = posc % ps
+    kp = kp.at[phys, :, off].set(k[:, 0].astype(kp.dtype), mode="drop")
+    vp = vp.at[phys, :, off].set(v[:, 0].astype(vp.dtype), mode="drop")
+    return {"k_pages": kp, "v_pages": vp, "page_table": pt}
 
 
 # ---------------------------------------------------------------------------
@@ -336,6 +458,9 @@ def mla_attention(
             new_cache = {"ckv": c, "krope": r, "pos": cp}
     else:
         # ---- decode with weight absorption: score and read in latent space
+        assert pos.ndim == 0, \
+            "MLA decode is lockstep-only (latent cache is dense); " \
+            "per-sequence positions are a paged-GQA feature"
         q_nope, q_rope = _mla_q(cfg, p, x, pos[None] if pos.ndim == 0 else pos)
         k_rope = apply_rope(k_rope, jnp.reshape(pos, (1,)), cfg.rope_theta)
         c_new = jax.lax.dynamic_update_slice_in_dim(

@@ -342,9 +342,25 @@ def forward(
 # ---------------------------------------------------------------------------
 # Cache construction
 # ---------------------------------------------------------------------------
+def num_pages(seq_len: int, page_size: int) -> int:
+    """Logical pages needed to hold ``seq_len`` tokens."""
+    return -(-seq_len // page_size)
+
+
 def _layer_cache_ab(cfg: ModelConfig, kind: str, B: int, S_max: int,
-                    src_len: int, cross: bool) -> Tree:
-    """Abstract cache (ParamAb reused as shape+axes carrier) for one layer."""
+                    src_len: int, cross: bool, layout: str = "dense",
+                    page_budget: Optional[int] = None) -> Tree:
+    """Abstract cache (ParamAb reused as shape+axes carrier) for one layer.
+
+    ``layout="paged"`` replaces the dense (B, K, S_max, hd) buffer of
+    *global* attention layers with a shared physical page pool plus a
+    per-sequence page table (vLLM-style).  ``page_budget`` is the pool size
+    in pages (default: worst case, B × ceil(S_max/page_size)).  Masked
+    decode writes (inactive slots) scatter out of bounds and are dropped,
+    so the pool carries no scratch page — its size stays divisible by the
+    mesh axes and shards cleanly over ``cache_pages``.
+    Ring-buffer (local) and MLA-latent caches stay dense — already bounded.
+    """
     K, hd = cfg.num_kv_heads, cfg.head_dim
     dt = cfg.dtype
     c: Tree = {}
@@ -357,16 +373,41 @@ def _layer_cache_ab(cfg: ModelConfig, kind: str, B: int, S_max: int,
                                    ("cache_batch", "kv_seq", None), "zeros", dt),
                 "pos": P.ParamAb((S_max,), (None,), "zeros", "int32"),
             }
-        else:
-            W = S_max if kind == GLOBAL_ATTN else min(cfg.window_size, S_max)
+        elif kind == GLOBAL_ATTN and layout == "paged":
+            ps = cfg.page_size
+            pps = num_pages(S_max, ps)
+            pool = page_budget if page_budget is not None else B * pps
+            c["attn"] = {
+                "k_pages": P.ParamAb((pool, K, ps, hd),
+                                     ("cache_pages", "kv_heads", None,
+                                      "head_dim"), "zeros", dt),
+                "v_pages": P.ParamAb((pool, K, ps, hd),
+                                     ("cache_pages", "kv_heads", None,
+                                      "head_dim"), "zeros", dt),
+                "page_table": P.ParamAb((B, pps), ("cache_batch", None),
+                                        "zeros", "int32"),
+            }
+        elif kind == GLOBAL_ATTN:
+            c["attn"] = {
+                "k": P.ParamAb((B, K, S_max, hd),
+                               ("cache_batch", "kv_heads", "kv_seq", "head_dim"),
+                               "zeros", dt),
+                "v": P.ParamAb((B, K, S_max, hd),
+                               ("cache_batch", "kv_heads", "kv_seq", "head_dim"),
+                               "zeros", dt),
+                "pos": P.ParamAb((S_max,), (None,), "zeros", "int32"),
+            }
+        else:                            # local: per-sequence ring buffer
+            W = min(cfg.window_size, S_max)
             c["attn"] = {
                 "k": P.ParamAb((B, K, W, hd),
-                               ("cache_batch", "kv_heads", "kv_seq", "head_dim"),
-                               "zeros", dt),
+                               ("cache_batch", "kv_heads", "window_seq",
+                                "head_dim"), "zeros", dt),
                 "v": P.ParamAb((B, K, W, hd),
-                               ("cache_batch", "kv_heads", "kv_seq", "head_dim"),
-                               "zeros", dt),
-                "pos": P.ParamAb((W,), (None,), "zeros", "int32"),
+                               ("cache_batch", "kv_heads", "window_seq",
+                                "head_dim"), "zeros", dt),
+                "pos": P.ParamAb((B, W), ("cache_batch", "window_seq"),
+                                 "zeros", "int32"),
             }
     elif kind == RECURRENT:
         R, CW = cfg.rnn_width, cfg.conv1d_width
@@ -399,43 +440,126 @@ def _layer_cache_ab(cfg: ModelConfig, kind: str, B: int, S_max: int,
 
 
 def abstract_cache(cfg: ModelConfig, batch_size: int, max_len: int,
-                   src_len: int = 0) -> Tree:
-    """Abstract decode/prefill cache matching the decoder stack layout."""
+                   src_len: int = 0, *, layout: Optional[str] = None,
+                   page_budget: Optional[int] = None) -> Tree:
+    """Abstract decode/prefill cache matching the decoder stack layout.
+    ``layout`` defaults to ``cfg.cache_layout``; ``page_budget`` sizes the
+    per-layer page pool (paged layout only; None = worst case)."""
+    layout = cfg.cache_layout if layout is None else layout
+    if layout not in ("dense", "paged"):
+        raise ValueError(f"unknown cache_layout {layout!r}")
     kinds = cfg.layer_kinds()
     pat = cfg.block_pattern
     cross = cfg.is_encoder_decoder
     prefix_n = cfg.first_k_dense
     body = kinds[prefix_n:]
     n_groups, tail_n = divmod(len(body), len(pat))
+    mk = lambda kind: _layer_cache_ab(cfg, kind, batch_size, max_len,
+                                      src_len, cross, layout, page_budget)
     out: Tree = {}
     if prefix_n:
-        out["prefix"] = {
-            str(i): _layer_cache_ab(cfg, kinds[i], batch_size, max_len,
-                                    src_len, cross)
-            for i in range(prefix_n)}
+        out["prefix"] = {str(i): mk(kinds[i]) for i in range(prefix_n)}
     if n_groups:
-        group = {str(j): _layer_cache_ab(cfg, pat[j], batch_size, max_len,
-                                         src_len, cross)
-                 for j in range(len(pat))}
+        group = {str(j): mk(pat[j]) for j in range(len(pat))}
         out["groups"] = P._stack(group, n_groups)
     if tail_n:
-        out["tail"] = {
-            str(j): _layer_cache_ab(cfg, pat[j], batch_size, max_len,
-                                    src_len, cross)
-            for j in range(tail_n)}
+        out["tail"] = {str(j): mk(pat[j]) for j in range(tail_n)}
     return out
 
 
 def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
-               src_len: int = 0) -> Tree:
-    ab = abstract_cache(cfg, batch_size, max_len, src_len)
+               src_len: int = 0, *, layout: Optional[str] = None,
+               page_budget: Optional[int] = None,
+               paged_tables: str = "identity") -> Tree:
+    """Concrete cache.  For the paged layout, ``paged_tables`` selects the
+    page-table init: ``"identity"`` (default; sequence ``b`` owns pages
+    ``b*pps .. (b+1)*pps-1`` — lockstep serving with a worst-case pool) or
+    ``"empty"`` (all -1; a host-side allocator assigns pages at admission —
+    see launch.serve).  Identity requires the worst-case pool, so it is
+    rejected when a smaller ``page_budget`` is given."""
+    ab = abstract_cache(cfg, batch_size, max_len, src_len,
+                        layout=layout, page_budget=page_budget)
+    if paged_tables == "identity" and page_budget is not None and \
+            page_budget < batch_size * num_pages(max_len, cfg.page_size):
+        raise ValueError(
+            "identity page tables need the worst-case pool; pass "
+            "paged_tables='empty' with a reduced page_budget")
 
-    def mk(leaf: P.ParamAb):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        ab, is_leaf=lambda x: isinstance(x, P.ParamAb))
+
+    def mk(path, leaf: P.ParamAb):
+        key = getattr(path[-1], "key", None)
+        if key == "page_table":
+            if paged_tables == "identity":
+                pps = leaf.shape[-1]
+                ident = jnp.arange(batch_size * pps,
+                                   dtype=jnp.int32).reshape(batch_size, pps)
+                return jnp.broadcast_to(ident, leaf.shape)
+            return jnp.full(leaf.shape, -1, jnp.int32)
         if leaf.dtype == "int32":       # position slots start invalid
             return jnp.full(leaf.shape, -1, jnp.int32)
         return jnp.zeros(leaf.shape, jnp.dtype(leaf.dtype))
 
-    return jax.tree.map(mk, ab, is_leaf=lambda x: isinstance(x, P.ParamAb))
+    return jax.tree.unflatten(treedef, [mk(p, l) for p, l in leaves])
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching helpers (host-side; see launch/serve.py).
+#
+# A "slot view" is the cache restricted to one batch row: per-sequence
+# leaves (page tables, ring buffers, recurrent state, …) are sliced to
+# batch 1, while the *shared* page pools pass through whole — a prefill
+# run on the view writes only the pages that row's table points to.
+# ---------------------------------------------------------------------------
+_POOL_LEAVES = ("k_pages", "v_pages")
+
+
+def _slot_axis(path) -> int:
+    """Batch axis of a cache leaf: scanned group leaves carry a leading
+    ``layers`` dim, so their batch dim is 1."""
+    return 1 if any(getattr(p, "key", None) == "groups" for p in path) else 0
+
+
+def _is_pool(path) -> bool:
+    return getattr(path[-1], "key", None) in _POOL_LEAVES
+
+
+def _is_shared_pos(path, leaf, batch_size: int, axis: int) -> bool:
+    """Lockstep-only shared slot maps ((S,) pos of dense-global / MLA
+    caches) have no batch dim and are left whole in a slot view."""
+    return getattr(path[-1], "key", None) == "pos" and \
+        (leaf.ndim <= axis or leaf.shape[axis] != batch_size)
+
+
+def cache_slot_view(cache: Tree, batch_size: int, b: int) -> Tree:
+    """Batch-1 view of ``cache`` for slot ``b`` (page pools shared)."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in leaves:
+        ax = _slot_axis(path)
+        if _is_pool(path) or _is_shared_pos(path, leaf, batch_size, ax):
+            out.append(leaf)
+        else:
+            out.append(jax.lax.slice_in_dim(leaf, b, b + 1, axis=ax))
+    return jax.tree.unflatten(treedef, out)
+
+
+def cache_slot_merge(cache: Tree, view: Tree, batch_size: int, b: int) -> Tree:
+    """Write a slot view (as returned by prefill) back into the full cache:
+    pool leaves replace wholesale, per-sequence leaves update row ``b``."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    vleaves = jax.tree.leaves(view)
+    assert len(leaves) == len(vleaves), (len(leaves), len(vleaves))
+    out = []
+    for (path, leaf), vleaf in zip(leaves, vleaves):
+        ax = _slot_axis(path)
+        if _is_pool(path) or _is_shared_pos(path, leaf, batch_size, ax):
+            out.append(vleaf)
+        else:
+            out.append(jax.lax.dynamic_update_slice_in_dim(
+                leaf, vleaf.astype(leaf.dtype), b, axis=ax))
+    return jax.tree.unflatten(treedef, out)
 
 
 def count_params(cfg: ModelConfig, active_only: bool = False) -> int:

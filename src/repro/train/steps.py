@@ -144,6 +144,13 @@ def make_train_step(
 
 # ---------------------------------------------------------------------------
 # Serve steps
+#
+# Both steps are cache-layout agnostic: the layout (dense fallback vs the
+# paged pool + page tables, selected by ``cfg.cache_layout`` /
+# ``init_cache(layout=...)``) rides in the cache pytree itself and the
+# model dispatches on it.  Decode ``pos`` is a scalar for lockstep batches
+# or a per-sequence (B,) vector for continuous batching (paged layout;
+# inactive slots carry -1 and their logits are garbage to be ignored).
 # ---------------------------------------------------------------------------
 def make_prefill_step(cfg: ModelConfig, ctx: Ctx):
     """(params, batch, cache) -> (last_logits, filled_cache)."""
@@ -155,9 +162,19 @@ def make_prefill_step(cfg: ModelConfig, ctx: Ctx):
 
 
 def make_decode_step(cfg: ModelConfig, ctx: Ctx):
-    """(params, tokens (B,1), cache, pos) -> (logits, cache)."""
+    """(params, tokens (B,1), cache, pos scalar|(B,)) -> (logits, cache)."""
     def decode_step(params, batch, cache, pos):
         logits, new_cache, _ = forward(cfg, params, batch, ctx,
                                        mode="decode", cache=cache, pos=pos)
         return logits, new_cache
     return decode_step
+
+
+def make_serve_steps(cfg: ModelConfig, ctx: Ctx, *, donate_cache: bool = True):
+    """Jitted (prefill, decode) pair for the serving driver.  The decode
+    cache argument is donated so the page pool / dense buffer is updated
+    in place across the token loop."""
+    prefill = jax.jit(make_prefill_step(cfg, ctx))
+    decode = jax.jit(make_decode_step(cfg, ctx),
+                     donate_argnums=(2,) if donate_cache else ())
+    return prefill, decode

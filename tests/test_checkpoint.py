@@ -71,6 +71,44 @@ def test_retention():
     assert ck.steps() == [3, 4]
 
 
+def test_retention_keep_last_zero():
+    """keep_last=0 keeps only the just-saved checkpoint (the historical
+    ``steps[:-0]`` slice deleted nothing at all)."""
+    store = ObjectStore()
+    ck = CheckpointManager(store, "job-z", keep_last=0)
+    for s in (1, 2, 3):
+        ck.save(s, tree(s))
+        assert ck.steps() == [s]
+    step, loaded = ck.load()
+    assert step == 3
+    np.testing.assert_array_equal(loaded["params"]["w"], tree(3)["params"]["w"])
+    # nothing but step 3 remains in the store
+    assert all("000000000003" in p for p in store.list_prefix("ckpt/job-z/"))
+
+
+def test_job_id_with_slash_rejected():
+    """A '/' in the job id would fold extra levels into the key layout and
+    mis-parse steps; reject it at construction."""
+    store = ObjectStore()
+    with pytest.raises(ValueError):
+        CheckpointManager(store, "tenant/job")
+    with pytest.raises(ValueError):
+        CheckpointManager(store, "")
+    with pytest.raises(ValueError):
+        CheckpointManager(store, "job-ok", keep_last=-1)
+
+
+def test_steps_ignores_foreign_keys():
+    """steps() parses relative to the listing prefix and skips non-step
+    entries that happen to live under it."""
+    store = ObjectStore()
+    ck = CheckpointManager(store, "job-f")
+    ck.save(4, tree(4))
+    store.put("ckpt/job-f/notes/manifest", b"{}")       # foreign key
+    store.put("ckpt/job-f/manifest", b"{}")             # no step level
+    assert ck.steps() == [4]
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 1000), nleaves=st.integers(1, 6))
 def test_roundtrip_property(seed, nleaves):

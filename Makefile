@@ -1,12 +1,20 @@
-# Convenience entry points.  `make verify` is the tier-1 gate (same command
+# Convenience entry points.  `make verify` is the tier-1 gate (same commands
 # CI runs); see ROADMAP.md.
 
 PY ?= python
 
-.PHONY: verify serve-smoke dryrun
+.PHONY: verify lint serve-smoke dryrun
 
-verify:
+verify: lint
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# ruff is available in CI; locally the lint step degrades gracefully
+lint:
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check .; \
+	else \
+		echo "ruff not installed; skipping lint"; \
+	fi
 
 serve-smoke:
 	PYTHONPATH=src $(PY) -m repro.launch.serve --reduced --batch 2 \

@@ -1,8 +1,9 @@
-"""Quickstart: submit a training job to the DLaaS platform, watch it run.
+"""Quickstart: submit a Job API v2 training job to the DLaaS platform,
+watch it run, then demonstrate idempotent resubmission and listing.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import DLaaSPlatform, JobManifest
+from repro.core import DLaaSPlatform, JobSpec, Resources, TrainSpec
 
 
 def main():
@@ -10,23 +11,31 @@ def main():
     platform = DLaaSPlatform(seed=0)
     platform.run(10)                      # services come up
 
-    manifest = JobManifest(
+    spec = JobSpec(
         name="my-first-job",
-        framework="qwen3-0.6b",           # any registry architecture
-        learners=4,
-        gpus_per_learner=2,
-        total_steps=100,
-        step_time_s=0.5,
-        checkpoint_interval_s=15.0,       # bound lost work to 15 virtual s
-    )
-    handle = platform.submit(manifest)
+        kind="train",                     # train | serve | dryrun
+        framework="qwen3-0.6b",           # any id in the adapter registry
+        resources=Resources(replicas=4, gpus_per_replica=2),
+        train=TrainSpec(
+            total_steps=100,
+            step_time_s=0.5,
+            checkpoint_interval_s=15.0,   # bound lost work to 15 virtual s
+        ))
+    handle = platform.submit(spec, request_id="quickstart-001")
     platform.run(5)
     print(f"submitted: acked={handle.acked} job_id={handle.job_id}")
+
+    # resubmitting the same request_id is idempotent: same job, no dup —
+    # this is how a client recovers from an ack lost to an API failover
+    again = platform.submit(spec, request_id="quickstart-001")
+    platform.run(5)
+    print(f"resubmit:  job_id={again.job_id} "
+          f"(deduplicated={again.deduplicated})")
 
     # poll status while it runs
     for _ in range(6):
         platform.run(15)
-        st = platform.client.status(handle.job_id)
+        st = platform.client.get(handle.job_id)
         print(f"t={platform.sim.now:7.1f}s  state={st['state']:12s} "
               f"learners={st['learner_states']}")
         if st["state"] in ("COMPLETED", "FAILED"):
@@ -34,6 +43,8 @@ def main():
 
     final = platform.run_until_terminal(handle.job_id, timeout=600)
     print(f"\nfinal state: {final}")
+    jobs, _ = platform.client.list(kind="train")
+    print(f"train jobs: {[(j['id'], j['state']) for j in jobs]}")
     print("\ntimeline (first 10 events):")
     for e in platform.client.events(handle.job_id)[:10]:
         print(f"  {e['t']:8.2f}  {e['event']}")

@@ -1,19 +1,15 @@
-"""Batched serving example: prefill + greedy decode over the public API
-(reduced configs run on CPU; full configs target the production mesh).
+"""Batched serving example over the Job API v2: flags become a
+``JobSpec(kind="serve")`` and the shared executor runs it — the exact
+same spec a client could submit to the platform for gang-scheduled,
+quota'd, metered serving (reduced configs run on CPU; full configs target
+the production mesh).
 
     PYTHONPATH=src python examples/serve_batch.py --arch rwkv6-7b
 """
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
-from repro.models.layers import Ctx
-from repro.models.model import init_cache
-from repro.models.params import init_params
-from repro.train.steps import make_decode_step, make_prefill_step
+from repro.core import JobSpec, ServeSpec
+from repro.launch.executor import execute
 
 
 def main():
@@ -24,38 +20,18 @@ def main():
     ap.add_argument("--gen", type=int, default=24)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).reduced()
-    ctx = Ctx(dtype=jnp.float32)
-    params = init_params(cfg, jax.random.key(0))
-    B, P, G = args.batch, args.prompt_len, args.gen
-
-    batch = {"tokens": jax.random.randint(jax.random.key(1), (B, P), 0,
-                                          cfg.vocab_size)}
-    src_len = 0
-    if cfg.is_encoder_decoder:
-        src_len = max(P // 4, 16)
-        batch["src_embeds"] = 0.02 * jax.random.normal(
-            jax.random.key(2), (B, src_len, cfg.d_model))
-
-    prefill = jax.jit(make_prefill_step(cfg, ctx))
-    decode = jax.jit(make_decode_step(cfg, ctx), donate_argnums=(2,))
-    cache = init_cache(cfg, B, P + G, src_len=src_len)
-
-    logits, cache = prefill(params, batch, cache)
-    tok = jnp.argmax(logits[:, -1], -1)[:, None]
-    generated = [tok]
-    t0 = time.time()
-    for t in range(P, P + G - 1):
-        logits, cache = decode(params, {"tokens": tok}, cache, jnp.int32(t))
-        tok = jnp.argmax(logits[:, -1], -1)[:, None]
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    out = jnp.concatenate(generated, 1)
-    print(f"[serve] {args.arch} (reduced) batch={B}: generated {G} tokens "
-          f"per request in {time.time()-t0:.1f}s")
-    for i in range(min(B, 2)):
-        print(f"  req {i}: {out[i].tolist()}")
+    spec = JobSpec(
+        name=f"serve-batch-{args.arch}",
+        kind="serve",
+        framework=args.arch,
+        serve=ServeSpec(
+            batch=args.batch,
+            prompt_len=args.prompt_len,
+            gen=args.gen,
+            reduced=True,
+        ))
+    return execute(spec)
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

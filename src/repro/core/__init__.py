@@ -1,5 +1,21 @@
 """The paper's primary contribution: the DLaaS dependability/orchestration
-layer (API → LCM → Guardian → helpers/learners on K8S/ETCD/Mongo analogs)."""
+layer (API → LCM → Guardian → helpers/learners on K8S/ETCD/Mongo analogs).
+
+Job API v2 (``repro.core.jobspec``) is the public resource model: one
+versioned ``JobSpec`` envelope with per-kind blocks for train/serve/dryrun
+workloads, behind a framework-adapter registry.  ``JobManifest`` is the
+deprecated v1 shim."""
+from repro.core.jobspec import (                       # noqa: F401
+    DryRunSpec,
+    FrameworkAdapter,
+    FrameworkRegistry,
+    JobSpec,
+    Resources,
+    ServeSpec,
+    SweepCell,
+    TrainSpec,
+)
+from repro.core.api import InvalidJobState, JobNotFound  # noqa: F401
 from repro.core.manifest import JobManifest            # noqa: F401
 from repro.core.platform import DLaaSPlatform          # noqa: F401
 from repro.core.checkpoint import CheckpointManager    # noqa: F401

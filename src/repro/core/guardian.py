@@ -1,18 +1,19 @@
 """The Guardian: per-job agent run as a K8S Job (paper §III-d/e/f).
 
 Atomic deployment: the Guardian performs the multi-step deploy (volume,
-network policy, gang admission, helper pod, learner stateful set).  Because
+network policy, gang admission, helper pod, workload pod set).  Because
 it runs under K8S-Job semantics, a crash at ANY step restarts it with fresh
 process state; the restarted incarnation first **rolls back** whatever the
 previous incarnation partially deployed (recorded step-by-step in ETCD),
 then redeploys from scratch.  After ``backoff_limit`` exhaustion the job is
 marked FAILED in Mongo by the LCM.
 
-After a successful deploy the Guardian monitors: aggregates per-learner
-statuses from ETCD into the job document, counts learner restarts against
-``max_restarts``, emits user-visible timestamped events (restarts included —
-users' training-progress graphs differ after a failure, §II), detects
-stragglers, and garbage-collects all job resources at the end.
+Job API v2: the Guardian dispatches on ``JobSpec.kind`` through the
+framework-adapter registry.  Train jobs get the full helper-pod + learner
+StatefulSet topology with straggler detection and elastic DP; serve and
+dryrun jobs get a gang of workload pods (servers / sweep runners) under
+the same quota, metering, restart-budget, halt and teardown machinery —
+every kind is a first-class, dependable platform job.
 """
 from __future__ import annotations
 
@@ -22,8 +23,7 @@ from repro.core.cluster import ContainerSpec, Deployment, PodSpec, StatefulSet
 from repro.core.helper import (
     make_controller_proc, make_load_data_proc, make_log_collector_proc,
     make_store_results_proc)
-from repro.core.learner import make_learner_proc
-from repro.core.manifest import JobManifest
+from repro.core.jobspec import JobSpec
 from repro.core.metadata import Unavailable
 from repro.core.recovery import StragglerDetector
 
@@ -33,13 +33,15 @@ MONITOR_PERIOD = 1.0
 # Fig-4 startup ranges
 HELPER_STARTUP = (3.0, 4.0)
 LEARNER_STARTUP = (10.0, 20.0)
+SERVER_STARTUP = (5.0, 10.0)         # inference replicas boot faster
 
 
-def make_guardian_proc(platform, job_id: str, manifest: JobManifest):
+def make_guardian_proc(platform, job_id: str, spec: JobSpec):
     def proc(pod):
         sim = platform.sim
         store = platform.statestore
         cluster = platform.cluster
+        adapter = platform.frameworks.get(spec.framework)
 
         # -- helpers --------------------------------------------------------
         def update_job(fields: Dict[str, Any], event: str = None):
@@ -58,7 +60,7 @@ def make_guardian_proc(platform, job_id: str, manifest: JobManifest):
         prior = store.try_get(f"deploy/{job_id}/resources", [])
         if prior:
             sim.log(f"guardian/{job_id}: rolling back partial deploy {prior}")
-            yield from _rollback(platform, job_id, manifest, prior)
+            yield from _rollback(platform, job_id, spec, prior)
             yield from store.put(f"deploy/{job_id}/resources", [])
             yield from update_job(
                 {}, event="ROLLBACK of partial deployment")
@@ -81,179 +83,264 @@ def make_guardian_proc(platform, job_id: str, manifest: JobManifest):
 
         # (b) network policy for tenant isolation
         yield sim.rng.uniform(*DEPLOY_STEP_TIME)
-        platform.netpolicies[job_id] = {"tenant": manifest.tenant,
+        platform.netpolicies[job_id] = {"tenant": spec.tenant,
                                         "job": job_id}
         yield from record(f"netpolicy/{job_id}")
 
         # (c) gang admission (quota + capacity, all-or-nothing).  Elastic
-        # jobs admit the largest feasible world when full capacity is gone
-        # (e.g. a redeploy after a node died) instead of failing.
+        # train jobs admit the largest feasible world when full capacity is
+        # gone (e.g. a redeploy after a node died) instead of failing.
         yield sim.rng.uniform(*DEPLOY_STEP_TIME)
-        world = manifest.learners
+        gang = adapter.gang(spec)
+        world, gpus_each = gang.replicas, gang.gpus_per_replica
         try:
             platform.scheduler.admit_gang(
-                cluster, manifest.tenant, world, manifest.gpus_per_learner)
+                cluster, spec.tenant, world, gpus_each)
         except Exception:
-            if not manifest.elastic:
+            if not (spec.elastic and spec.kind == "train"):
                 raise
             world = platform.scheduler.max_feasible_gang(
-                cluster, manifest.gpus_per_learner, manifest.learners)
+                cluster, gpus_each, gang.replicas)
             if world < 1:
                 raise
             platform.scheduler.admit_gang(
-                cluster, manifest.tenant, world, manifest.gpus_per_learner)
+                cluster, spec.tenant, world, gpus_each)
             yield from update_job(
                 {"world": world},
-                f"ELASTIC admission {manifest.learners} -> {world}")
+                f"ELASTIC admission {gang.replicas} -> {world}")
         platform.gang_sizes[job_id] = world
         platform.volumes.get(f"vol-{job_id}").write("world", world)
         yield from record(f"gang/{job_id}")
 
-        # (d) helper pod (controller, load-data, log-collector, store-results)
-        yield sim.rng.uniform(*DEPLOY_STEP_TIME)
-        helper_spec = lambda i: PodSpec(
-            name=f"helper-{job_id}",
-            containers=[
-                ContainerSpec("load-data", make_load_data_proc(platform, job_id, manifest)),
-                ContainerSpec("controller", make_controller_proc(platform, job_id, manifest)),
-                ContainerSpec("log-collector", make_log_collector_proc(platform, job_id, manifest)),
-                ContainerSpec("store-results", make_store_results_proc(platform, job_id, manifest)),
-            ],
-            startup_range=HELPER_STARTUP,
-            labels={"role": "helper", "job": job_id},
-            tenant=manifest.tenant)
-        platform.deployments[f"helper-{job_id}"] = Deployment(
-            cluster, f"helper-{job_id}", helper_spec, replicas=1)
-        yield from record(f"deployment/helper-{job_id}")
+        # (d) helper pod (controller, load-data, log-collector,
+        #     store-results) — train kind only; serve/dryrun workloads
+        #     heartbeat straight through the volume and ship their own logs
+        if spec.kind == "train":
+            yield sim.rng.uniform(*DEPLOY_STEP_TIME)
+            helper_spec = lambda i: PodSpec(
+                name=f"helper-{job_id}",
+                containers=[
+                    ContainerSpec("load-data", make_load_data_proc(platform, job_id, spec)),
+                    ContainerSpec("controller", make_controller_proc(platform, job_id, spec)),
+                    ContainerSpec("log-collector", make_log_collector_proc(platform, job_id, spec)),
+                    ContainerSpec("store-results", make_store_results_proc(platform, job_id, spec)),
+                ],
+                startup_range=HELPER_STARTUP,
+                labels={"role": "helper", "job": job_id},
+                tenant=spec.tenant)
+            platform.deployments[f"helper-{job_id}"] = Deployment(
+                cluster, f"helper-{job_id}", helper_spec, replicas=1)
+            yield from record(f"deployment/helper-{job_id}")
 
-        # (e) learner stateful set (stable identities learner-<job>-i)
+        # (e) workload pod set (stable identities <role>-<job>-i), built by
+        #     the framework adapter: learners / servers / sweep runners
         yield sim.rng.uniform(*DEPLOY_STEP_TIME)
+        role = spec.role
+        startup = LEARNER_STARTUP if spec.kind == "train" else SERVER_STARTUP
         mk = lambda i: PodSpec(
-            name=f"learner-{job_id}-{i}",
+            name=f"{role}-{job_id}-{i}",
             containers=[ContainerSpec(
-                "learner", make_learner_proc(platform, job_id, manifest, i))],
-            gpus=manifest.gpus_per_learner,
-            startup_range=LEARNER_STARTUP,
-            labels={"role": "learner", "job": job_id,
-                    "tenant": manifest.tenant},
-            tenant=manifest.tenant)
+                role, adapter.workload_proc(platform, job_id, spec, i))],
+            gpus=gpus_each,
+            startup_range=startup,
+            labels={"role": role, "job": job_id,
+                    "tenant": spec.tenant},
+            tenant=spec.tenant)
         ss = StatefulSet(cluster, f"learners-{job_id}", mk, replicas=world)
         platform.statefulsets[f"learners-{job_id}"] = ss
         yield from record(f"statefulset/learners-{job_id}")
 
         platform.tenancy.metering.job_started(
-            job_id, manifest.tenant,
-            manifest.learners * manifest.gpus_per_learner, sim.now)
+            job_id, spec.tenant, gang.replicas * gpus_each, sim.now)
         yield from update_job({"state": "PROCESSING"}, "PROCESSING")
 
         # ---- 3. monitor until completion/failure/halt -------------------------
-        from repro.core.elastic import ElasticPolicy
-        straggler = StragglerDetector(manifest.learners)
-        elastic = ElasticPolicy(min_world=1)
-        learner_failures = 0
-        seen_restarts = [0] * manifest.learners
-        last_agg = None
-        pending_since: Dict[int, float] = {}
-        vol = platform.volumes.get(f"vol-{job_id}")
-        while True:
-            yield MONITOR_PERIOD
-
-            # ---- elastic DP shrink: a learner stuck PENDING (capacity lost,
-            # e.g. node died with no spare GPUs) stalls synchronous training
-            # forever; if the job opted in, shrink the world instead.
-            if manifest.elastic:
-                world = vol.read("world", manifest.learners)
-                stuck = 0
-                for i, p in enumerate(ss.pods[:world]):
-                    if p.status == "PENDING":
-                        pending_since.setdefault(i, sim.now)
-                        if sim.now - pending_since[i] > 25.0:
-                            stuck += 1
-                    else:
-                        pending_since.pop(i, None)
-                if stuck:
-                    new_world = elastic.decide(world, world - stuck)
-                    if new_world and new_world < world:
-                        plan = elastic.remesh_plan(world, new_world, 256)
-                        vol.write("world", new_world)
-                        vol.write("remesh",
-                                  {"old": world, "new": new_world,
-                                   "shard_map": {str(k): v for k, v in
-                                                 plan.shard_map.items()}})
-                        ss.resize(new_world)
-                        platform.scheduler.release_gang(
-                            manifest.tenant, world - new_world,
-                            manifest.gpus_per_learner)
-                        platform.gang_sizes[job_id] = new_world
-                        yield from update_job(
-                            {"world": new_world},
-                            f"ELASTIC shrink {world} -> {new_world} "
-                            f"(capacity lost; DP re-mesh)")
-                        pending_since.clear()
-
-            # user-initiated halt?
-            try:
-                doc = platform.metadata.get("jobs", job_id)
-            except Unavailable:
-                doc = None
-            if doc and doc.get("desired_state") == "HALTED":
-                yield from _teardown(platform, job_id, manifest, store)
-                yield from update_job({"state": "HALTED"}, "HALTED by user")
-                platform.tenancy.metering.job_stopped(job_id, sim.now)
-                return 0
-
-            # count learner pod restarts (failure detection by K8S + ss)
-            for i in range(min(len(ss.restarts_total), len(seen_restarts))):
-                if ss.restarts_total[i] > seen_restarts[i]:
-                    learner_failures += ss.restarts_total[i] - seen_restarts[i]
-                    seen_restarts[i] = ss.restarts_total[i]
-                    yield from update_job(
-                        {"restarts": learner_failures},
-                        f"learner-{i} RESTARTED "
-                        f"(total restarts {learner_failures})")
-
-            if learner_failures > manifest.max_restarts:
-                yield from _teardown(platform, job_id, manifest, store)
-                yield from update_job(
-                    {"state": "FAILED"},
-                    f"FAILED: restarts {learner_failures} > "
-                    f"max_restarts {manifest.max_restarts}")
-                platform.tenancy.metering.job_stopped(job_id, sim.now)
-                return 0
-
-            # aggregate learner statuses from ETCD -> Mongo
-            world = vol.read("world", manifest.learners) if vol else \
-                manifest.learners
-            sts = [store.try_get(f"status/{job_id}/learner/{i}")
-                   for i in range(world)]
-            if all(s and s["state"] == "SUCCEEDED" for s in sts):
-                # let the helper finish log shipping + results upload first
-                helper = platform.deployments.get(f"helper-{job_id}")
-                deadline = sim.now + 60.0
-                while helper is not None and not helper.all_succeeded() \
-                        and sim.now < deadline:
-                    yield 1.0
-                yield from _teardown(platform, job_id, manifest, store)
-                yield from update_job({"state": "COMPLETED"}, "COMPLETED")
-                platform.tenancy.metering.job_stopped(job_id, sim.now)
-                return 0
-
-            agg = _aggregate(sts)
-            if agg != last_agg:
-                yield from update_job(
-                    {"learner_states": agg}, f"status: {agg}")
-                last_agg = agg
-
-            # straggler detection from heartbeat progress
-            steps_list = [s.get("step") if s else None for s in sts]
-            steps_list += [None] * (manifest.learners - len(steps_list))
-            slow = straggler.update(sim.now, steps_list)
-            for i in slow:
-                yield from update_job(
-                    {}, f"learner-{i} STRAGGLER (progress lag); restarting")
-                cluster.kubectl_delete_pod(f"learner-{job_id}-{i}")
+        if spec.kind == "train":
+            yield from _monitor_train(platform, job_id, spec, ss, store,
+                                      update_job)
+        else:
+            yield from _monitor_gang(platform, job_id, spec, ss, store,
+                                     update_job, world)
+        return 0
 
     return proc
+
+
+def _finish(platform, job_id: str, spec: JobSpec, store, update_job,
+            state: str, event: str):
+    """Shared terminal sequence: teardown, final state + event, settle
+    metering.  Every monitor endgame (halt/fail/complete, any kind) runs
+    through here so the bookkeeping can never drift apart."""
+    yield from _teardown(platform, job_id, spec, store)
+    yield from update_job({"state": state}, event)
+    platform.tenancy.metering.job_stopped(job_id, platform.sim.now)
+
+
+def _monitor_train(platform, job_id: str, spec: JobSpec, ss, store,
+                   update_job):
+    """Training monitor: elastic DP shrink, straggler detection, restart
+    budget, ETCD→Mongo status aggregation, halt, completion."""
+    sim = platform.sim
+    cluster = platform.cluster
+    from repro.core.elastic import ElasticPolicy
+    straggler = StragglerDetector(spec.learners)
+    elastic = ElasticPolicy(min_world=1)
+    learner_failures = 0
+    seen_restarts = [0] * spec.learners
+    last_agg = None
+    pending_since: Dict[int, float] = {}
+    vol = platform.volumes.get(f"vol-{job_id}")
+    while True:
+        yield MONITOR_PERIOD
+
+        # ---- elastic DP shrink: a learner stuck PENDING (capacity lost,
+        # e.g. node died with no spare GPUs) stalls synchronous training
+        # forever; if the job opted in, shrink the world instead.
+        if spec.elastic:
+            world = vol.read("world", spec.learners)
+            stuck = 0
+            for i, p in enumerate(ss.pods[:world]):
+                if p.status == "PENDING":
+                    pending_since.setdefault(i, sim.now)
+                    if sim.now - pending_since[i] > 25.0:
+                        stuck += 1
+                else:
+                    pending_since.pop(i, None)
+            if stuck:
+                new_world = elastic.decide(world, world - stuck)
+                if new_world and new_world < world:
+                    plan = elastic.remesh_plan(world, new_world, 256)
+                    vol.write("world", new_world)
+                    vol.write("remesh",
+                              {"old": world, "new": new_world,
+                               "shard_map": {str(k): v for k, v in
+                                             plan.shard_map.items()}})
+                    ss.resize(new_world)
+                    platform.scheduler.release_gang(
+                        spec.tenant, world - new_world,
+                        spec.gpus_per_learner)
+                    platform.gang_sizes[job_id] = new_world
+                    yield from update_job(
+                        {"world": new_world},
+                        f"ELASTIC shrink {world} -> {new_world} "
+                        f"(capacity lost; DP re-mesh)")
+                    pending_since.clear()
+
+        # user-initiated halt?
+        try:
+            doc = platform.metadata.get("jobs", job_id)
+        except Unavailable:
+            doc = None
+        if doc and doc.get("desired_state") == "HALTED":
+            yield from _finish(platform, job_id, spec, store, update_job,
+                               "HALTED", "HALTED by user")
+            return 0
+
+        # count learner pod restarts (failure detection by K8S + ss)
+        for i in range(min(len(ss.restarts_total), len(seen_restarts))):
+            if ss.restarts_total[i] > seen_restarts[i]:
+                learner_failures += ss.restarts_total[i] - seen_restarts[i]
+                seen_restarts[i] = ss.restarts_total[i]
+                yield from update_job(
+                    {"restarts": learner_failures},
+                    f"learner-{i} RESTARTED "
+                    f"(total restarts {learner_failures})")
+
+        if learner_failures > spec.max_restarts:
+            yield from _finish(
+                platform, job_id, spec, store, update_job, "FAILED",
+                f"FAILED: restarts {learner_failures} > "
+                f"max_restarts {spec.max_restarts}")
+            return 0
+
+        # aggregate learner statuses from ETCD -> Mongo
+        world = vol.read("world", spec.learners) if vol else \
+            spec.learners
+        sts = [store.try_get(f"status/{job_id}/learner/{i}")
+               for i in range(world)]
+        if all(s and s["state"] == "SUCCEEDED" for s in sts):
+            # let the helper finish log shipping + results upload first
+            helper = platform.deployments.get(f"helper-{job_id}")
+            deadline = sim.now + 60.0
+            while helper is not None and not helper.all_succeeded() \
+                    and sim.now < deadline:
+                yield 1.0
+            yield from _finish(platform, job_id, spec, store, update_job,
+                               "COMPLETED", "COMPLETED")
+            return 0
+
+        agg = _aggregate(sts)
+        if agg != last_agg:
+            yield from update_job(
+                {"learner_states": agg}, f"status: {agg}")
+            last_agg = agg
+
+        # straggler detection from heartbeat progress
+        steps_list = [s.get("step") if s else None for s in sts]
+        steps_list += [None] * (spec.learners - len(steps_list))
+        slow = straggler.update(sim.now, steps_list)
+        for i in slow:
+            yield from update_job(
+                {}, f"learner-{i} STRAGGLER (progress lag); restarting")
+            cluster.kubectl_delete_pod(f"learner-{job_id}-{i}")
+
+
+def _monitor_gang(platform, job_id: str, spec: JobSpec, ss, store,
+                  update_job, world: int):
+    """Generic gang monitor for serve/dryrun kinds: halt, restart budget,
+    volume-exit completion, progress surfaced into the job document."""
+    sim = platform.sim
+    vol = platform.volumes.get(f"vol-{job_id}")
+    failures = 0
+    seen_restarts = [0] * world
+    last_note = None
+    while True:
+        yield MONITOR_PERIOD
+
+        # user-initiated halt?
+        try:
+            doc = platform.metadata.get("jobs", job_id)
+        except Unavailable:
+            doc = None
+        if doc and doc.get("desired_state") == "HALTED":
+            yield from _finish(platform, job_id, spec, store, update_job,
+                               "HALTED", "HALTED by user")
+            return 0
+
+        # restart budget (K8S recreates crashed replicas in place)
+        for i in range(min(len(ss.restarts_total), world)):
+            if ss.restarts_total[i] > seen_restarts[i]:
+                failures += ss.restarts_total[i] - seen_restarts[i]
+                seen_restarts[i] = ss.restarts_total[i]
+                yield from update_job(
+                    {"restarts": failures},
+                    f"{spec.role}-{i} RESTARTED (total restarts {failures})")
+        if failures > spec.max_restarts:
+            yield from _finish(
+                platform, job_id, spec, store, update_job, "FAILED",
+                f"FAILED: restarts {failures} > "
+                f"max_restarts {spec.max_restarts}")
+            return 0
+
+        # completion: every workload pod wrote its exit file
+        exits = [vol.read(f"exit/{i}") for i in range(world)]
+        if all(e is not None for e in exits):
+            ok = all(e == 0 for e in exits)
+            yield from _finish(
+                platform, job_id, spec, store, update_job,
+                "COMPLETED" if ok else "FAILED",
+                "COMPLETED" if ok else f"FAILED: exit codes {exits}")
+            return 0
+
+        # surface gang progress into the job document
+        if spec.kind == "serve":
+            note = f"RUNNING (served {vol.read('served', 0)})"
+        else:
+            done = len(vol.ls("cell/"))
+            note = f"RUNNING (cells {done})"
+        if note != last_note:
+            yield from update_job({"learner_states": note}, f"status: {note}")
+            last_note = note
 
 
 def _aggregate(sts) -> str:
@@ -268,7 +355,7 @@ def _aggregate(sts) -> str:
     return f"{worst} (min step {min(steps) if steps else 0})"
 
 
-def _rollback(platform, job_id, manifest, resources):
+def _rollback(platform, job_id, spec, resources):
     """Delete partially-created resources in reverse creation order."""
     for res in reversed(resources):
         kind, name = res.split("/", 1)
@@ -284,17 +371,17 @@ def _rollback(platform, job_id, manifest, resources):
             for p in d.pods:
                 p.fail()
         elif kind == "gang":
-            n = platform.gang_sizes.pop(job_id, manifest.learners)
+            n = platform.gang_sizes.pop(job_id, spec.learners)
             platform.scheduler.release_gang(
-                manifest.tenant, n, manifest.gpus_per_learner)
+                spec.tenant, n, spec.gpus_per_learner)
         elif kind == "netpolicy":
             platform.netpolicies.pop(job_id, None)
         elif kind == "volume":
             platform.volumes.release(name)
 
 
-def _teardown(platform, job_id, manifest, store):
+def _teardown(platform, job_id, spec, store):
     """Orderly cleanup at job end (volume contents are shipped already)."""
     res = store.try_get(f"deploy/{job_id}/resources", [])
-    yield from _rollback(platform, job_id, manifest, res)
+    yield from _rollback(platform, job_id, spec, res)
     yield from store.put(f"deploy/{job_id}/resources", [])

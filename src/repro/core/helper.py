@@ -11,16 +11,16 @@ from __future__ import annotations
 
 from typing import Any, Dict
 
-from repro.core.manifest import JobManifest
+from repro.core.jobspec import JobSpec
 
 DATA_BW_GBPS = 0.5           # object-store → volume streaming bandwidth
 
 
-def make_load_data_proc(platform, job_id: str, manifest: JobManifest):
+def make_load_data_proc(platform, job_id: str, spec: JobSpec):
     def proc(pod):
         vol = platform.volumes.get(f"vol-{job_id}")
         # stream the dataset from COS to the shared volume
-        remaining = vol.read("data_remaining_gb", manifest.dataset_gb)
+        remaining = vol.read("data_remaining_gb", spec.dataset_gb)
         while remaining > 0:
             yield 1.0
             remaining = max(0.0, remaining - DATA_BW_GBPS)
@@ -30,7 +30,7 @@ def make_load_data_proc(platform, job_id: str, manifest: JobManifest):
     return proc
 
 
-def make_controller_proc(platform, job_id: str, manifest: JobManifest):
+def make_controller_proc(platform, job_id: str, spec: JobSpec):
     """Watches the volume; writes learner statuses to ETCD; decides
     checkpoint-mode rollbacks on learner failure."""
 
@@ -38,12 +38,12 @@ def make_controller_proc(platform, job_id: str, manifest: JobManifest):
         sim = platform.sim
         vol = platform.volumes.get(f"vol-{job_id}")
         store = platform.statestore
-        stale_after = 3.0 * manifest.step_time_s + 2.0
+        stale_after = 3.0 * spec.step_time_s + 2.0
         rb_epoch = vol.read("rollback_epoch", 0)
         was_unreachable = False
 
         while True:
-            world = vol.read("world", manifest.learners)
+            world = vol.read("world", spec.learners)
             any_running = False
             for i in range(world):
                 ex = vol.read(f"exit/{i}")
@@ -70,7 +70,7 @@ def make_controller_proc(platform, job_id: str, manifest: JobManifest):
                     pass
 
             # checkpoint-mode group rollback: once per failure incident
-            if manifest.extras.get("recovery_mode", "checkpoint") == "checkpoint" \
+            if spec.recovery_mode == "checkpoint" \
                     and world > 1:
                 sts = [store.try_get(f"status/{job_id}/learner/{i}")
                        for i in range(world)]
@@ -93,14 +93,14 @@ def make_controller_proc(platform, job_id: str, manifest: JobManifest):
     return proc
 
 
-def make_log_collector_proc(platform, job_id: str, manifest: JobManifest):
+def make_log_collector_proc(platform, job_id: str, spec: JobSpec):
     def proc(pod):
         vol = platform.volumes.get(f"vol-{job_id}")
         store = platform.objectstore
         shipped: Dict[str, int] = {}
         while True:
             done = all(vol.read(f"exit/{i}") is not None
-                       for i in range(vol.read("world", manifest.learners)))
+                       for i in range(vol.read("world", spec.learners)))
             for path in vol.ls("log/"):
                 lines = vol.read(path, [])
                 n0 = shipped.get(path, 0)
@@ -119,17 +119,17 @@ def make_log_collector_proc(platform, job_id: str, manifest: JobManifest):
     return proc
 
 
-def make_store_results_proc(platform, job_id: str, manifest: JobManifest):
+def make_store_results_proc(platform, job_id: str, spec: JobSpec):
     def proc(pod):
         vol = platform.volumes.get(f"vol-{job_id}")
         while True:
-            world = vol.read("world", manifest.learners)
+            world = vol.read("world", spec.learners)
             exits = [vol.read(f"exit/{i}") for i in range(world)]
             if all(e is not None for e in exits):
                 if all(e == 0 for e in exits):
                     platform.objectstore.put(
                         f"cos/{job_id}/results/model",
-                        f"trained:{manifest.framework}:{manifest.total_steps}"
+                        f"trained:{spec.framework}:{spec.total_steps}"
                         .encode())
                 return 0
             yield 2.0

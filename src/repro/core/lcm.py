@@ -11,7 +11,7 @@ from __future__ import annotations
 
 from repro.core.cluster import ContainerSpec, KJob, PodSpec
 from repro.core.guardian import make_guardian_proc, _rollback
-from repro.core.manifest import JobManifest
+from repro.core.jobspec import spec_from_job_doc
 from repro.core.metadata import Unavailable
 
 GUARDIAN_STARTUP = (1.0, 2.0)        # Fig-4: guardian creation < 3 s
@@ -37,21 +37,25 @@ def make_lcm_proc(platform):
                 job_id = doc["id"]
                 if job_id in platform.guardians:
                     continue                     # another LCM replica won
-                manifest = JobManifest(**doc["manifest"])
-                spec = PodSpec(
+                spec = spec_from_job_doc(doc)    # v2 doc or legacy manifest
+                pod_spec = PodSpec(
                     name=f"guardian-{job_id}",
                     containers=[ContainerSpec(
                         "guardian",
-                        make_guardian_proc(platform, job_id, manifest))],
+                        make_guardian_proc(platform, job_id, spec))],
                     startup_range=GUARDIAN_STARTUP,
                     labels={"role": "guardian", "job": job_id})
 
-                def on_exhausted(job_id=job_id, manifest=manifest):
+                def on_exhausted(job_id=job_id, spec=spec):
                     # guardian retries exhausted -> FAIL the job + reap
                     def reaper():
                         res = platform.statestore.try_get(
                             f"deploy/{job_id}/resources", [])
-                        yield from _rollback(platform, job_id, manifest, res)
+                        yield from _rollback(platform, job_id, spec, res)
+                        # settle metering if the guardian died after
+                        # job_started — otherwise the dead job would accrue
+                        # in-flight GPU-seconds forever
+                        platform.tenancy.metering.job_stopped(job_id, sim.now)
                         try:
                             platform.metadata.update(
                                 "jobs", job_id, {"state": "FAILED"})
@@ -64,7 +68,7 @@ def make_lcm_proc(platform):
                     sim.spawn(reaper())
 
                 platform.guardians[job_id] = KJob(
-                    platform.cluster, f"guardian-{job_id}", spec,
+                    platform.cluster, f"guardian-{job_id}", pod_spec,
                     backoff_limit=GUARDIAN_BACKOFF_LIMIT,
                     on_exhausted=on_exhausted)
                 try:
@@ -80,12 +84,12 @@ def make_lcm_proc(platform):
                 job_id = doc["id"]
                 name = f"learners-{job_id}"
                 if name in platform.statefulsets:
-                    manifest = JobManifest(**doc["manifest"])
+                    spec = spec_from_job_doc(doc)
                     res = platform.statestore.try_get(
                         f"deploy/{job_id}/resources", [])
                     if res:
                         sim.log(f"lcm: gc {job_id}")
-                        yield from _rollback(platform, job_id, manifest, res)
+                        yield from _rollback(platform, job_id, spec, res)
                         yield from platform.statestore.put(
                             f"deploy/{job_id}/resources", [])
 

@@ -20,7 +20,7 @@ from __future__ import annotations
 from typing import Any, Dict, Optional
 
 from repro.core.checkpoint import CheckpointManager
-from repro.core.manifest import JobManifest
+from repro.core.jobspec import JobSpec
 
 HEARTBEAT_STALE = 3.0          # × step_time ⇒ peer considered unreachable
 RESTORE_TIME = (1.0, 3.0)      # checkpoint download+load (virtual)
@@ -59,7 +59,7 @@ class RealPayload:
         return jax.tree.map(lambda x: x, self.state)
 
 
-def make_learner_proc(platform, job_id: str, manifest: JobManifest, idx: int):
+def make_learner_proc(platform, job_id: str, spec: JobSpec, idx: int):
     """Container process for learner ``idx`` of ``job_id``."""
 
     def proc(pod):
@@ -68,7 +68,7 @@ def make_learner_proc(platform, job_id: str, manifest: JobManifest, idx: int):
         if vol is None:
             raise RuntimeError("volume not mounted")
         ckpt = CheckpointManager(platform.objectstore, job_id)
-        payload = platform.payloads.get(job_id) if manifest.real_compute else None
+        payload = platform.payloads.get(job_id) if spec.real_compute else None
 
         # -- wait for load-data helper ------------------------------------
         while not vol.read("data_ready"):
@@ -79,8 +79,8 @@ def make_learner_proc(platform, job_id: str, manifest: JobManifest, idx: int):
         step = 0
         rollback = vol.read("rollback_to")
         group_steps = [vol.read(f"progress/{j}", {"step": 0})["step"]
-                       for j in range(manifest.learners)]
-        if manifest.extras.get("recovery_mode", "checkpoint") == "rejoin" and \
+                       for j in range(spec.learners)]
+        if spec.recovery_mode == "rejoin" and \
                 max(group_steps) > 0:
             step = max(group_steps)           # catch up from peers (PS-style)
             if payload is not None:
@@ -118,7 +118,7 @@ def make_learner_proc(platform, job_id: str, manifest: JobManifest, idx: int):
         vol.write(f"progress/{idx}", {"step": step, "t": sim.now})
 
         # -- train loop ---------------------------------------------------------
-        while step < manifest.total_steps:
+        while step < spec.total_steps:
             # group rollback marker (checkpoint-mode recovery)
             rb = vol.read("rollback_to")
             if rb is not None and rb.get("epoch", -1) > \
@@ -135,7 +135,7 @@ def make_learner_proc(platform, job_id: str, manifest: JobManifest, idx: int):
             # synchronous DP: stall while any peer heartbeat is stale
             # (a finished peer — exit file present — no longer heartbeats).
             # World size is dynamic (elastic re-meshing shrinks it).
-            world = vol.read("world", manifest.learners)
+            world = vol.read("world", spec.learners)
             if idx >= world:
                 return 0                      # resized away (defensive)
             stale = False
@@ -143,7 +143,7 @@ def make_learner_proc(platform, job_id: str, manifest: JobManifest, idx: int):
                 if j == idx or vol.read(f"exit/{j}") is not None:
                     continue
                 pr = vol.read(f"progress/{j}")
-                allow = HEARTBEAT_STALE * manifest.step_time_s + 2.0
+                allow = HEARTBEAT_STALE * spec.step_time_s + 2.0
                 if pr is not None and pr.get("saving"):
                     # peer announced a checkpoint upload: extend the lease by
                     # the worst-case save time so a slow save (or a short
@@ -154,18 +154,18 @@ def make_learner_proc(platform, job_id: str, manifest: JobManifest, idx: int):
             if stale:
                 vol.write(f"progress/{idx}",
                           {"step": step, "t": sim.now, "stalled": True})
-                yield manifest.step_time_s
+                yield spec.step_time_s
                 continue
 
             # one training step
             if payload is not None:
                 loss = payload.step(step)
                 vol.write("last_loss", loss)
-            yield manifest.step_time_s
+            yield spec.step_time_s
             step += 1
             vol.write(f"progress/{idx}", {"step": step, "t": sim.now})
             if payload is not None and idx == 0 and \
-                    manifest.extras.get("recovery_mode") == "rejoin":
+                    spec.recovery_mode == "rejoin":
                 # publish the current parameters for rejoin-mode peers
                 # (PS-style fetch through the shared volume; cheap — the
                 # snapshot holds references, not copies)
@@ -175,7 +175,7 @@ def make_learner_proc(platform, job_id: str, manifest: JobManifest, idx: int):
                 vol.append(f"log/{idx}", f"[{sim.now:.2f}] step {step}")
 
             # periodic checkpoint (chief learner)
-            if idx == 0 and (sim.now - last_ckpt_t) >= manifest.checkpoint_interval_s:
+            if idx == 0 and (sim.now - last_ckpt_t) >= spec.checkpoint_interval_s:
                 tree = payload.snapshot() if payload is not None \
                     else {"step": step}
                 import numpy as np

@@ -1,7 +1,13 @@
-"""Job manifest — what a user submits (paper §III-a).
+"""Job manifest v1 — DEPRECATED in favor of ``repro.core.jobspec.JobSpec``.
 
 ``framework`` names one of the registry architectures: the platform treats
 architectures the way DLaaS treats frameworks (opaque learner payloads).
+
+This flat, training-only manifest predates the multi-kind Job API v2.  It
+is kept as a compatibility shim: the gateway accepts it and converts via
+:meth:`JobManifest.to_jobspec` (equivalence is pinned by tests), and the
+LCM still reconciles legacy job documents that carry ``manifest`` instead
+of ``spec``.  New code should construct a ``JobSpec`` directly.
 """
 from __future__ import annotations
 
@@ -40,3 +46,29 @@ class JobManifest:
         if self.checkpoint_interval_s <= 0:
             return "checkpoint_interval_s must be > 0"
         return None
+
+    def to_jobspec(self):
+        """Convert to the v2 resource model (kind ``train``)."""
+        from repro.core.jobspec import JobSpec, Resources, TrainSpec
+        return JobSpec(
+            name=self.name,
+            kind="train",
+            tenant=self.tenant,
+            framework=self.framework,
+            resources=Resources(replicas=self.learners,
+                                gpus_per_replica=self.gpus_per_learner),
+            max_restarts=self.max_restarts,
+            elastic=self.elastic,
+            priority=self.priority,
+            seed=self.seed,
+            extras=dict(self.extras),
+            train=TrainSpec(
+                total_steps=self.total_steps,
+                step_time_s=self.step_time_s,
+                checkpoint_interval_s=self.checkpoint_interval_s,
+                data_source=self.data_source,
+                dataset_gb=self.dataset_gb,
+                result_location=self.result_location,
+                real_compute=self.real_compute,
+                recovery_mode=self.extras.get("recovery_mode", "checkpoint"),
+            ))

@@ -64,6 +64,25 @@ class MetadataStore:
         return [copy.deepcopy(d) for d in self._disk.get(coll, {}).values()
                 if pred(d)]
 
+    def delete(self, coll: str, doc_id: str) -> None:
+        self._check()
+        d = self._disk.get(coll, {})
+        if doc_id not in d:
+            raise KeyError(f"{coll}/{doc_id}")
+        self._journal.append(("delete", coll, doc_id))
+        del d[doc_id]
+
+    def bump_counter(self, name: str) -> int:
+        """Durable monotonic counter (findAndModify analog): returns the
+        next value and persists the advance atomically.  Survives API-pod
+        restarts, so id allocation never rewinds."""
+        self._check()
+        doc = self._disk.get("counters", {}).get(name)
+        n = (doc or {}).get("next", 1)
+        self._journal.append(("counter", name, n))
+        self._disk.setdefault("counters", {})[name] = {"next": n + 1}
+        return n
+
     def append_event(self, coll: str, doc_id: str, event: dict) -> None:
         self._check()
         d = self._disk.get(coll, {}).get(doc_id)

@@ -16,6 +16,7 @@ from typing import Any, Dict, List, Optional
 
 from repro.core.api import ApiClient, SubmitHandle, make_api_proc
 from repro.core.cluster import Cluster, ContainerSpec, Deployment, PodSpec
+from repro.core.jobspec import FrameworkRegistry, JobSpec
 from repro.core.lcm import make_lcm_proc
 from repro.core.manifest import JobManifest
 from repro.core.metadata import MetadataStore
@@ -46,6 +47,9 @@ class DLaaSPlatform:
         self.objectstore = ObjectStore()
         self.volumes = VolumeManager()
         self.netpolicy = NetworkPolicy()
+        # framework-adapter registry: one adapter per architecture by
+        # default; register() more to plug in new frameworks (Job API v2)
+        self.frameworks = FrameworkRegistry.default()
 
         # mutable registries
         self.api_queue: List[SubmitHandle] = []
@@ -93,8 +97,9 @@ class DLaaSPlatform:
         return "TIMEOUT"
 
     # -- convenience passthroughs ------------------------------------------
-    def submit(self, manifest: JobManifest) -> SubmitHandle:
-        return self.client.submit(manifest)
+    def submit(self, spec: "JobSpec | JobManifest",
+               request_id: Optional[str] = None) -> SubmitHandle:
+        return self.client.submit(spec, request_id=request_id)
 
     def register_payload(self, job_id: str, payload) -> None:
         self.payloads[job_id] = payload

@@ -1,0 +1,100 @@
+"""Serve- and dryrun-kind workload pods (Job API v2 kinds beyond training).
+
+Server pods model inference replicas: each drains requests from the job's
+shared queue in virtual time and heartbeats through the shared NFS volume —
+the same contract learners use, so the Guardian's generic gang monitor
+covers every kind.  The shared ``served`` counter lives on the volume, so a
+restarted server resumes where the gang left off instead of re-serving.
+
+Both pod types run customer code and are therefore labelled with restricted
+``NetworkPolicy`` roles: they may only touch their own volume and their own
+job's object-store prefix (where they ship their logs, keeping
+``ApiClient.logs`` uniform across kinds).
+"""
+from __future__ import annotations
+
+import json
+
+from repro.core.jobspec import JobSpec, resolve_cells
+
+LOG_SHIP_EVERY = 10              # requests between log shipments
+
+
+def _ship_log(platform, job_id: str, idx: int, line: str) -> None:
+    """Append one line to the job's COS log key (own-prefix write — the
+    only object-store path NetworkPolicy allows a workload pod)."""
+    key = f"cos/{job_id}/logs/{idx}"
+    existing = platform.objectstore.get(key) if \
+        platform.objectstore.exists(key) else b""
+    platform.objectstore.put(key, existing + line.encode() + b"\n")
+
+
+def make_server_proc(platform, job_id: str, spec: JobSpec, idx: int):
+    """Container process for server replica ``idx`` of a serve-kind job."""
+
+    def proc(pod):
+        sim = platform.sim
+        vol = platform.volumes.get(f"vol-{job_id}")
+        if vol is None:
+            raise RuntimeError("volume not mounted")
+        sv = spec.serve
+        _ship_log(platform, job_id, idx,
+                  f"[{sim.now:.2f}] server {idx} up "
+                  f"(framework {spec.framework})")
+        while True:
+            # claim-then-serve: the claim is atomic (no yield between read
+            # and write), so a gang of R replicas serves EXACTLY
+            # ``requests`` — no stale-read overshoot of up to R-1
+            claimed = vol.read("claimed", 0)
+            if sv.requests and claimed >= sv.requests:
+                break                         # queue drained by the gang
+            vol.write("claimed", claimed + 1)
+            yield sv.request_time_s           # process one request
+            served = vol.read("served", 0) + 1
+            vol.write("served", served)
+            vol.write(f"progress/{idx}", {"served": served, "t": sim.now})
+            if served % LOG_SHIP_EVERY == 0:
+                _ship_log(platform, job_id, idx,
+                          f"[{sim.now:.2f}] served {served}")
+        vol.write(f"exit/{idx}", 0)
+        _ship_log(platform, job_id, idx,
+                  f"[{sim.now:.2f}] server {idx} done "
+                  f"({vol.read('served', 0)} served)")
+        return 0
+
+    return proc
+
+
+def make_dryrun_proc(platform, job_id: str, spec: JobSpec, idx: int):
+    """Container process for a dryrun-kind job: walk the sweep cells,
+    publishing one artifact per cell to the job's COS prefix.  Cell
+    completion markers live on the volume, so a restarted runner resumes
+    the sweep instead of recompiling finished cells."""
+
+    def proc(pod):
+        sim = platform.sim
+        vol = platform.volumes.get(f"vol-{job_id}")
+        if vol is None:
+            raise RuntimeError("volume not mounted")
+        dr = spec.dryrun
+        cells = resolve_cells(dr)
+        for ci, cell in enumerate(cells):
+            if vol.read(f"cell/{ci}") is not None and not dr.force:
+                continue                      # resumable sweep
+            yield dr.cell_time_s              # virtual lower + compile
+            rec = {"ok": True, "arch": cell.arch, "shape": cell.shape,
+                   "mesh": cell.mesh_name, "job": job_id}
+            key = (f"cos/{job_id}/dryrun/"
+                   f"{cell.arch}__{cell.shape}__{cell.mesh_name}.json")
+            platform.objectstore.put(key, json.dumps(rec).encode())
+            vol.write(f"cell/{ci}", key)
+            vol.write(f"progress/{idx}", {"cells": ci + 1, "t": sim.now})
+            _ship_log(platform, job_id, idx,
+                      f"[{sim.now:.2f}] cell {cell.arch}×{cell.shape}×"
+                      f"{cell.mesh_name} done")
+        vol.write(f"exit/{idx}", 0)
+        _ship_log(platform, job_id, idx,
+                  f"[{sim.now:.2f}] sweep complete ({len(cells)} cells)")
+        return 0
+
+    return proc

@@ -38,8 +38,16 @@ class Metering:
             tenant, gpus, t0 = rec
             self.usage[tenant] = self.usage.get(tenant, 0.0) + gpus * (now - t0)
 
-    def gpu_seconds(self, tenant: str) -> float:
-        return self.usage.get(tenant, 0.0)
+    def gpu_seconds(self, tenant: str, now: Optional[float] = None) -> float:
+        """Metered usage.  With ``now``, in-flight jobs accrue up to the
+        read time — a tenant with only running jobs no longer meters 0.0
+        until the first ``job_stopped``."""
+        total = self.usage.get(tenant, 0.0)
+        if now is not None:
+            for t, gpus, t0 in self._running.values():
+                if t == tenant:
+                    total += gpus * max(0.0, now - t0)
+        return total
 
 
 class TenancyManager:
@@ -68,17 +76,21 @@ class TenancyManager:
 
 
 class NetworkPolicy:
-    """Learner pods may talk only to their own job's resources."""
+    """Workload pods (learners, servers, dryrun runners — they all execute
+    customer code) may talk only to their own job's resources."""
 
     SYSTEM_SERVICES = ("dlaas-api", "dlaas-lcm", "mongo", "etcd")
+    WORKLOAD_ROLES = ("learner", "server", "dryrun")
 
     @staticmethod
     def allowed(src_labels: Dict[str, str], dst: str) -> bool:
         role = src_labels.get("role", "")
-        if role != "learner":
+        if role not in NetworkPolicy.WORKLOAD_ROLES:
             return True                        # system pods are trusted
         job = src_labels.get("job", "")
-        # learners: own volume, own status prefix, object store paths of own job
+        # workloads: own volume, own status prefix, object store paths of
+        # own job.  Prefix matches are segment-anchored: job-001 must NOT
+        # be allowed to read cos/job-0010/... .
         if dst in NetworkPolicy.SYSTEM_SERVICES:
             return False
         if dst.startswith("volume/"):
@@ -86,5 +98,7 @@ class NetworkPolicy:
         if dst.startswith("status/"):
             return dst.startswith(f"status/{job}/")
         if dst.startswith("cos/"):
-            return dst.startswith(f"cos/{job}") or dst.startswith("cos/datasets")
+            return (dst == f"cos/{job}" or dst.startswith(f"cos/{job}/")
+                    or dst == "cos/datasets"
+                    or dst.startswith("cos/datasets/"))
         return False

@@ -118,7 +118,7 @@ DEFAULT_RULES = ShardingRules().override(
     #   * ``cache_pages`` — physical-page dim of the paged pool.  Pages have
     #     no batch dim (the pool is shared), so they shard over batch-ish
     #     axes AND the tensor axis; the serving allocator keeps a sequence's
-    #     pages inside its own data shard (launch.serve.PagePool partitions
+    #     pages inside its own data shard (launch.executor.PagePool partitions
     #     its free lists per shard — spec-level invariants are checked by
     #     check_cache_locality).
     kv_seq=("tensor", "model"),
@@ -240,7 +240,7 @@ def check_cache_locality(tree, mesh, rules: ShardingRules = DEFAULT_RULES) -> Di
 
     These are *spec-level* invariants.  Which physical page a sequence's
     table points at is runtime data, so page→shard locality is enforced by
-    the serving allocator instead (``launch.serve.PagePool`` partitions its
+    the serving allocator instead (``launch.executor.PagePool`` partitions its
     free lists per data shard).
 
     Returns ``{leaf_path: spec}`` for introspection; raises ``ValueError``

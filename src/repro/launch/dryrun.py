@@ -10,12 +10,13 @@ compiled HLO yields the FLOP/byte/collective terms for §Roofline.
 
 Each cell writes ``artifacts/dryrun/<arch>__<shape>__<mesh>.json`` and is
 skipped when that file exists (the sweep is resumable; use --force to
-recompute).  ``--all`` runs cells in subprocesses for isolation.
+recompute).  The CLI is a parse-to-spec layer: flags become a
+``JobSpec(kind="dryrun")`` that the shared executor runs, one subprocess
+per cell for isolation (the hidden ``--cell-worker`` entry).
 """
 import argparse
 import json
 import re
-import subprocess
 import sys
 import time
 import traceback
@@ -230,36 +231,9 @@ def all_cells():
             yield arch, shape_name
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch")
-    ap.add_argument("--shape")
-    ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--all", action="store_true",
-                    help="run every cell (both meshes) in subprocesses")
-    ap.add_argument("--force", action="store_true")
-    ap.add_argument("--timeout", type=int, default=3600)
-    args = ap.parse_args(argv)
-    ARTIFACTS.mkdir(parents=True, exist_ok=True)
-
-    if args.all:
-        failures = 0
-        for arch, shape_name in all_cells():
-            for mp in (False, True):
-                out = cell_path(arch, shape_name, mp)
-                if out.exists() and not args.force:
-                    continue
-                cmd = [sys.executable, "-m", "repro.launch.dryrun",
-                       "--arch", arch, "--shape", shape_name]
-                if mp:
-                    cmd.append("--multi-pod")
-                print(f"[dryrun] {arch} × {shape_name} × "
-                      f"{'2x16x16' if mp else '16x16'} ...", flush=True)
-                r = subprocess.run(cmd, timeout=args.timeout)
-                if r.returncode:
-                    failures += 1
-        return 1 if failures else 0
-
+def _run_cell_worker(args) -> int:
+    """In-process single-cell execution (the subprocess entry the shared
+    executor dispatches to; isolation keeps each cell's XLA fresh)."""
     assert args.arch and args.shape, "--arch and --shape required"
     out = cell_path(args.arch, args.shape, args.multi_pod)
     if out.exists() and not args.force:
@@ -281,6 +255,48 @@ def main(argv=None) -> int:
              ("ok", "arch", "shape", "mesh", "compile_s", "memory", "skipped")}
     print(json.dumps(brief, indent=2))
     return 0
+
+
+def parse_spec(argv=None):
+    """Parse CLI flags into a ``JobSpec(kind="dryrun")`` (plus the raw
+    args, for the hidden --cell-worker plumbing)."""
+    from repro.core.jobspec import DryRunSpec, JobSpec, Resources, SweepCell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every cell (both meshes) in subprocesses")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--cell-worker", action="store_true",
+                    help=argparse.SUPPRESS)     # executor's subprocess entry
+    args = ap.parse_args(argv)
+
+    if args.all:
+        cells, sweep_all = (), True
+    else:
+        assert args.arch and args.shape, "--arch and --shape required"
+        cells = (SweepCell(args.arch, args.shape, args.multi_pod),)
+        sweep_all = False
+    spec = JobSpec(
+        name="dryrun-all" if args.all else f"dryrun-{args.arch}",
+        kind="dryrun",
+        framework=args.arch or "paper-overhead-100m",
+        resources=Resources(replicas=1, gpus_per_replica=0),
+        dryrun=DryRunSpec(cells=cells, sweep_all=sweep_all,
+                          force=args.force, timeout_s=args.timeout))
+    return spec, args
+
+
+def main(argv=None) -> int:
+    spec, args = parse_spec(argv)
+    if args.cell_worker:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        return _run_cell_worker(args)
+    from repro.launch.executor import execute
+    return execute(spec)
 
 
 if __name__ == "__main__":

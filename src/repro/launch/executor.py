@@ -1,0 +1,390 @@
+"""One executor for every job kind — local execution of a ``JobSpec``.
+
+The three launch CLIs (``train``, ``serve``, ``dryrun``) are thin
+parse-to-spec layers over this module: each builds a validated
+``JobSpec`` and hands it to :func:`execute`, which dispatches on
+``spec.kind``.  The exact same spec can instead be submitted to the
+platform (``DLaaSPlatform.submit``) where the Guardian runs it under the
+full dependability machinery — one resource model, two run paths.
+
+Serving internals (the :class:`PagePool` allocator, lockstep and
+continuous-batching loops) live here; ``repro.launch.serve`` re-exports
+``PagePool`` for compatibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+import subprocess
+import sys
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.jobspec import (
+    FrameworkRegistry, JobSpec, ServeSpec, resolve_cells)
+
+
+def execute(spec: JobSpec) -> int:
+    """Validate and run a JobSpec locally; returns a process exit code."""
+    err = spec.validate(FrameworkRegistry.default())
+    if err:
+        raise SystemExit(f"invalid JobSpec: {err}")
+    if spec.kind == "train":
+        return _run_train(spec)
+    if spec.kind == "serve":
+        return _run_serve(spec)
+    return _run_dryrun(spec)
+
+
+def _make_mesh(name: str):
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    return {"host": make_host_mesh,
+            "prod": make_production_mesh,
+            "multipod": lambda: make_production_mesh(multi_pod=True)}[name]()
+
+
+# ---------------------------------------------------------------------------
+# kind = train
+# ---------------------------------------------------------------------------
+def _run_train(spec: JobSpec) -> int:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import RunConfig, get_config
+    from repro.data.pipeline import SyntheticLMData
+    from repro.models.layers import Ctx
+    from repro.train.steps import init_train_state, make_train_step
+
+    t = spec.train
+    cfg = get_config(spec.framework)
+    if t.reduced:
+        cfg = cfg.reduced()
+    mesh = _make_mesh(t.mesh)
+    ctx = Ctx(mesh=mesh, dtype=jnp.float32 if t.reduced else jnp.bfloat16,
+              use_pallas=t.use_pallas)
+    run = RunConfig(num_microbatches=t.num_microbatches,
+                    remat_policy=t.remat_policy,
+                    learning_rate=t.learning_rate,
+                    warmup_steps=max(t.total_steps // 20, 1),
+                    total_steps=t.total_steps)
+    state = init_train_state(cfg, jax.random.key(spec.seed), run)
+    data = SyntheticLMData(cfg.vocab_size, t.seq_len, t.global_batch,
+                           spec.seed)
+    step = jax.jit(make_train_step(cfg, ctx, run), donate_argnums=(0,))
+
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"mesh={mesh.devices.shape} devices={mesh.devices.size}")
+    t0 = time.time()
+    for i in range(t.total_steps):
+        state, m = step(state, data.batch_at(i))
+        if i % t.log_every == 0 or i == t.total_steps - 1:
+            print(f"  step {i:5d}  loss {float(m['loss']):.4f}  "
+                  f"gnorm {float(m['grad_norm']):.3f}  "
+                  f"lr {float(m['lr']):.2e}")
+    dt = time.time() - t0
+    tok = t.total_steps * t.global_batch * t.seq_len
+    print(f"[train] {t.total_steps} steps in {dt:.1f}s "
+          f"({tok/dt:.0f} tok/s incl. compile)")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# kind = serve
+# ---------------------------------------------------------------------------
+class PagePool:
+    """Host-side physical-page allocator for the paged KV cache.
+
+    Manages page ids ``0 .. n_pages-1``.  Conservative admission: the
+    serving loop reserves a request's full worst-case page count up front,
+    so decode can never run out mid-flight (no preemption needed).
+
+    ``n_shards > 1`` partitions the id space into contiguous per-shard free
+    lists.  The pool's pages dim shards contiguously over the data axis
+    (``cache_pages`` rule), so allocating a sequence's pages from its own
+    data shard's range keeps every decode gather/scatter data-shard-local —
+    the runtime half of the locality contract whose spec half is
+    ``dist.sharding.check_cache_locality``.
+    """
+
+    def __init__(self, n_pages: int, n_shards: int = 1):
+        assert n_shards >= 1 and n_pages % n_shards == 0, (n_pages, n_shards)
+        self.n_pages = n_pages
+        self.n_shards = n_shards
+        per = n_pages // n_shards
+        self.free_lists: List[List[int]] = [
+            list(range(s * per, (s + 1) * per)) for s in range(n_shards)]
+        self.high_water = 0
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - sum(len(f) for f in self.free_lists)
+
+    def alloc(self, n: int, shard: int = 0) -> Optional[List[int]]:
+        fl = self.free_lists[shard]
+        if n > len(fl):
+            return None
+        pages, self.free_lists[shard] = fl[:n], fl[n:]
+        self.high_water = max(self.high_water, self.in_use)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        per = self.n_pages // self.n_shards
+        for p in pages:
+            self.free_lists[min(p // per, self.n_shards - 1)].append(p)
+
+
+def _set_page_tables(cache, host_table: np.ndarray):
+    """Broadcast the (B, pps) host page table into every per-layer
+    ``page_table`` leaf (layers index their own pools identically)."""
+    import jax
+    import jax.numpy as jnp
+
+    table = jnp.asarray(host_table, jnp.int32)
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in leaves:
+        if getattr(path[-1], "key", None) == "page_table":
+            out.append(jnp.broadcast_to(table, leaf.shape).astype(jnp.int32))
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+def run_lockstep(cfg, ctx, params, sv: ServeSpec) -> int:
+    """Batched prefill + lockstep greedy decode (dense or paged layout)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.model import init_cache
+    from repro.train.steps import make_serve_steps
+
+    B, P, G = sv.batch, sv.prompt_len, sv.gen
+    max_len = P + G
+    prompts = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab_size)
+    batch = {"tokens": prompts}
+    src_len = 0
+    if cfg.is_encoder_decoder:
+        src_len = max(P // 4, 16)
+        batch["src_embeds"] = 0.02 * jax.random.normal(
+            jax.random.key(2), (B, src_len, cfg.d_model))
+
+    prefill, decode = make_serve_steps(cfg, ctx)
+    cache = init_cache(cfg, B, max_len, src_len=src_len)
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch, cache)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    t_prefill = time.time() - t0
+
+    out = [tok]
+    t0 = time.time()
+    for t in range(P, P + G - 1):
+        logits, cache = decode(params, {"tokens": tok}, cache, jnp.int32(t))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = jnp.concatenate(out, axis=1)
+    print(f"[serve] arch={cfg.name} layout={cfg.cache_layout} "
+          f"batch={B} prompt={P} gen={G}")
+    print(f"  prefill: {t_prefill*1e3:.1f} ms "
+          f"({B*P/t_prefill:.0f} tok/s incl. compile)")
+    print(f"  decode:  {t_decode*1e3:.1f} ms "
+          f"({B*(G-1)/max(t_decode,1e-9):.0f} tok/s incl. compile)")
+    print(f"  sample continuations: {gen[:2, :10].tolist()}")
+    return 0
+
+
+def run_continuous(cfg, ctx, params, sv: ServeSpec, seed: int = 0) -> int:
+    """Continuous batching over the paged cache: a queue of requests with
+    varying generation lengths is admitted per-request whenever the page
+    allocator can reserve the request's worst-case pages; finished requests
+    free their pages immediately, letting the next one in."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.model import (
+        cache_slot_merge, cache_slot_view, init_cache, num_pages)
+    from repro.train.steps import make_serve_steps
+
+    if cfg.cache_layout != "paged":
+        raise SystemExit("--continuous requires --layout paged")
+    if cfg.use_mla or cfg.is_encoder_decoder:
+        raise SystemExit("--continuous needs per-sequence decode positions; "
+                         "MLA / enc-dec caches are lockstep-only")
+
+    B, P, G = sv.batch, sv.prompt_len, sv.gen
+    max_len = P + G
+    ps = cfg.page_size
+    pps = num_pages(max_len, ps)
+    budget = sv.page_budget or B * pps
+    if budget < pps:
+        raise SystemExit(f"--page-budget {budget} cannot hold one request "
+                         f"({pps} pages)")
+
+    rng = np.random.default_rng(seed)
+    n_req = sv.requests
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(1), (n_req, P), 0, cfg.vocab_size))
+    gen_lens = rng.integers(max(G // 2, 1), G + 1, size=n_req)
+
+    prefill, decode = make_serve_steps(cfg, ctx)
+    cache = init_cache(cfg, B, max_len, layout="paged", page_budget=budget,
+                       paged_tables="empty")
+    # page→data-shard locality: slot b's batch row lives on one data shard,
+    # so allocate its pages from that shard's contiguous range.  Falls back
+    # to one shard when the budget doesn't split evenly or a shard couldn't
+    # hold even a single request (which would deadlock admission).
+    n_shards = dict(zip(ctx.mesh.axis_names, ctx.mesh.axis_sizes)).get(
+        "data", 1) if ctx.mesh is not None else 1
+    if budget % n_shards or B % n_shards or budget // n_shards < pps:
+        n_shards = 1
+    pool = PagePool(budget, n_shards)
+    host_table = np.full((B, pps), -1, np.int32)
+
+    slots: List[Optional[dict]] = [None] * B
+    toks = np.zeros((B, 1), np.int64)
+    pos = np.full((B,), -1, np.int64)
+    next_req = 0
+    done: List[int] = []
+    stalled_admissions = 0
+    t0 = time.time()
+    decode_steps = 0
+    generated = 0
+
+    def finish(b: int) -> None:
+        nonlocal cache
+        s = slots[b]
+        pool.free(s["pages"])
+        host_table[b, :] = -1
+        cache = _set_page_tables(cache, host_table)
+        done.append(s["req"])
+        slots[b] = None
+        pos[b] = -1
+        toks[b, 0] = 0
+
+    while len(done) < n_req:
+        # ---- admission: one request per free slot, if pages are available
+        for b in range(B):
+            if slots[b] is not None or next_req >= n_req:
+                continue
+            r = next_req
+            need = num_pages(P + int(gen_lens[r]), ps)
+            pages = pool.alloc(need, shard=b * n_shards // B)
+            if pages is None:
+                stalled_admissions += 1
+                break                        # FIFO: don't admit out of order
+            next_req += 1
+            host_table[b, :need] = pages
+            host_table[b, need:] = -1
+            cache = _set_page_tables(cache, host_table)
+            view = cache_slot_view(cache, B, b)
+            logits, view = prefill(
+                params, {"tokens": jnp.asarray(prompts[r][None])}, view)
+            cache = cache_slot_merge(cache, view, B, b)
+            toks[b, 0] = int(jnp.argmax(logits[0, -1]))
+            pos[b] = P
+            slots[b] = {"req": r, "remaining": int(gen_lens[r]) - 1,
+                        "pages": pages}
+            generated += 1
+            if slots[b]["remaining"] <= 0:
+                finish(b)                    # gen_len == 1: prefill was it
+
+        if all(s is None for s in slots):
+            if next_req >= n_req:
+                break                        # queue drained
+            continue                         # everything finished at prefill
+
+        # ---- one decode step over every active slot (inactive rows: -1)
+        logits, cache = decode(params, {"tokens": jnp.asarray(toks)}, cache,
+                               jnp.asarray(pos, jnp.int32))
+        decode_steps += 1
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for b in range(B):
+            s = slots[b]
+            if s is None:
+                continue
+            toks[b, 0] = int(nxt[b])
+            pos[b] += 1
+            generated += 1
+            s["remaining"] -= 1
+            if s["remaining"] <= 0:
+                finish(b)
+
+    jax.block_until_ready(cache)
+    dt = time.time() - t0
+    print(f"[serve/continuous] arch={cfg.name} requests={n_req} slots={B} "
+          f"prompt={P} gen<= {G} page_size={ps}")
+    print(f"  pool: {budget} pages, high-water {pool.high_water}, "
+          f"admission stalls {stalled_admissions}")
+    print(f"  completed {len(done)}/{n_req} in {decode_steps} decode steps, "
+          f"{dt*1e3:.1f} ms ({generated/max(dt,1e-9):.0f} tok/s incl. "
+          f"compile)")
+    assert len(done) == n_req, (len(done), n_req)
+    return 0
+
+
+def _run_serve(spec: JobSpec) -> int:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models.layers import Ctx
+    from repro.models.params import init_params
+
+    sv = spec.serve
+    cfg = get_config(spec.framework)
+    if sv.reduced:
+        cfg = cfg.reduced()
+    overrides = {}
+    if sv.cache_layout:
+        overrides["cache_layout"] = sv.cache_layout
+    if sv.continuous and "cache_layout" not in overrides:
+        overrides["cache_layout"] = "paged"
+    if sv.page_size:
+        overrides["page_size"] = sv.page_size
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    mesh = _make_mesh(sv.mesh)
+    ctx = Ctx(mesh=mesh, dtype=jnp.float32 if sv.reduced else jnp.bfloat16)
+    params = init_params(cfg, jax.random.key(spec.seed))
+
+    if sv.continuous:
+        return run_continuous(cfg, ctx, params, sv, seed=spec.seed)
+    return run_lockstep(cfg, ctx, params, sv)
+
+
+# ---------------------------------------------------------------------------
+# kind = dryrun
+# ---------------------------------------------------------------------------
+def _run_dryrun(spec: JobSpec) -> int:
+    """Run the sweep cells, one subprocess each (isolation: every cell gets
+    a fresh XLA with the 512 fake-host-device flag).  Cached cells are
+    skipped unless the spec says ``force`` — the sweep is resumable."""
+    from repro.launch import dryrun as dr_mod
+
+    dr = spec.dryrun
+    dr_mod.ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for cell in resolve_cells(dr):
+        out = dr_mod.cell_path(cell.arch, cell.shape, cell.multi_pod)
+        if out.exists() and not dr.force:
+            print(f"[dryrun] cached: {out}")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--cell-worker",
+               "--arch", cell.arch, "--shape", cell.shape]
+        if cell.multi_pod:
+            cmd.append("--multi-pod")
+        if dr.force:
+            cmd.append("--force")
+        print(f"[dryrun] {cell.arch} × {cell.shape} × {cell.mesh_name} ...",
+              flush=True)
+        r = subprocess.run(cmd, timeout=dr.timeout_s)
+        if r.returncode:
+            failures += 1
+    return 1 if failures else 0

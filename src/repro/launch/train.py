@@ -1,4 +1,8 @@
-"""Training driver: real JAX training of any registry architecture.
+"""Training CLI: a thin parse-to-spec layer over the shared executor.
+
+Flags build a ``JobSpec(kind="train")``; ``repro.launch.executor`` runs it.
+The same spec can be submitted to the platform instead
+(``DLaaSPlatform.submit``) to run under the full dependability machinery.
 
 CPU-runnable with --reduced (the same code path the production mesh uses;
 on a real TPU slice drop --reduced and pass --mesh prod/multipod).
@@ -9,19 +13,12 @@ on a real TPU slice drop --reduced and pass --mesh prod/multipod).
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import RunConfig, get_config
-from repro.data.pipeline import SyntheticLMData
-from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.models.layers import Ctx
-from repro.train.steps import init_train_state, make_train_step
+from repro.core.jobspec import JobSpec, TrainSpec
+from repro.launch.executor import execute
 
 
-def main(argv=None) -> int:
+def parse_spec(argv=None) -> JobSpec:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paper-overhead-100m")
     ap.add_argument("--reduced", action="store_true")
@@ -37,37 +34,27 @@ def main(argv=None) -> int:
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    mesh = {"host": make_host_mesh,
-            "prod": make_production_mesh,
-            "multipod": lambda: make_production_mesh(multi_pod=True)}[args.mesh]()
-    ctx = Ctx(mesh=mesh, dtype=jnp.float32 if args.reduced else jnp.bfloat16,
-              use_pallas=args.use_pallas)
-    run = RunConfig(num_microbatches=args.microbatches,
-                    remat_policy=args.remat, learning_rate=args.lr,
-                    warmup_steps=max(args.steps // 20, 1),
-                    total_steps=args.steps)
-    state = init_train_state(cfg, jax.random.key(args.seed), run)
-    data = SyntheticLMData(cfg.vocab_size, args.seq, args.batch, args.seed)
-    step = jax.jit(make_train_step(cfg, ctx, run), donate_argnums=(0,))
+    return JobSpec(
+        name=f"train-{args.arch}",
+        kind="train",
+        framework=args.arch,
+        seed=args.seed,
+        train=TrainSpec(
+            total_steps=args.steps,
+            global_batch=args.batch,
+            seq_len=args.seq,
+            learning_rate=args.lr,
+            num_microbatches=args.microbatches,
+            remat_policy=args.remat,
+            mesh=args.mesh,
+            use_pallas=args.use_pallas,
+            reduced=args.reduced,
+            log_every=args.log_every,
+        ))
 
-    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
-    print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M "
-          f"mesh={mesh.devices.shape} devices={mesh.devices.size}")
-    t0 = time.time()
-    for i in range(args.steps):
-        state, m = step(state, data.batch_at(i))
-        if i % args.log_every == 0 or i == args.steps - 1:
-            print(f"  step {i:5d}  loss {float(m['loss']):.4f}  "
-                  f"gnorm {float(m['grad_norm']):.3f}  "
-                  f"lr {float(m['lr']):.2e}")
-    dt = time.time() - t0
-    tok = args.steps * args.batch * args.seq
-    print(f"[train] {args.steps} steps in {dt:.1f}s "
-          f"({tok/dt:.0f} tok/s incl. compile)")
-    return 0
+
+def main(argv=None) -> int:
+    return execute(parse_spec(argv))
 
 
 if __name__ == "__main__":

@@ -475,7 +475,7 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
     page-table init: ``"identity"`` (default; sequence ``b`` owns pages
     ``b*pps .. (b+1)*pps-1`` — lockstep serving with a worst-case pool) or
     ``"empty"`` (all -1; a host-side allocator assigns pages at admission —
-    see launch.serve).  Identity requires the worst-case pool, so it is
+    see launch.executor).  Identity requires the worst-case pool, so it is
     rejected when a smaller ``page_budget`` is given."""
     ab = abstract_cache(cfg, batch_size, max_len, src_len,
                         layout=layout, page_budget=page_budget)
@@ -505,7 +505,7 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
 
 
 # ---------------------------------------------------------------------------
-# Continuous-batching helpers (host-side; see launch/serve.py).
+# Continuous-batching helpers (host-side; see launch/executor.py).
 #
 # A "slot view" is the cache restricted to one batch row: per-sequence
 # leaves (page tables, ring buffers, recurrent state, …) are sliced to

@@ -1,0 +1,407 @@
+"""Job API v2 gateway — the ISSUE-3 redesign, each guarantee tested.
+
+Covers: idempotent resubmission (including across an API-pod kill
+mid-submit), metadata-backed id allocation surviving API restarts and
+platform co-residency, list filtering + pagination, serve/dryrun kinds as
+first-class platform jobs (quota, metering, halt), uniform not-found
+semantics, registry-backed validation at submission, the v1 manifest shim,
+and the satellite fixes (NetworkPolicy prefix anchoring, in-flight
+metering)."""
+import pytest
+
+from repro.core import (
+    DLaaSPlatform, DryRunSpec, InvalidJobState, JobManifest, JobNotFound,
+    JobSpec, Resources, ServeSpec, SweepCell, TrainSpec,
+)
+from repro.core.tenancy import Metering, NetworkPolicy
+
+
+def boot(seed=0, **kw):
+    p = DLaaSPlatform(seed=seed, **kw)
+    p.run(10)            # core services come up
+    return p
+
+
+def submit(p, spec, request_id=None, run=5):
+    h = p.submit(spec, request_id=request_id)
+    p.run(run)
+    assert h.acked and h.job_id, h.rejected
+    return h
+
+
+def train_spec(name="job", **train_kw):
+    res = train_kw.pop("resources", Resources(1, 1))
+    train_kw.setdefault("step_time_s", 0.2)
+    train_kw.setdefault("total_steps", 10)
+    return JobSpec(name=name, kind="train", resources=res,
+                   train=TrainSpec(**train_kw))
+
+
+# ---------------------------------------------------------------------------
+# Idempotent submission
+# ---------------------------------------------------------------------------
+def test_resubmit_same_request_id_returns_same_job():
+    p = boot(seed=1)
+    h1 = submit(p, train_spec(), request_id="rid-A")
+    h2 = submit(p, train_spec(), request_id="rid-A")
+    assert h2.job_id == h1.job_id and h2.deduplicated
+    docs = p.metadata.find("jobs", lambda d: d.get("request_id") == "rid-A")
+    assert len(docs) == 1
+
+
+def test_resubmit_after_api_pod_crash_no_duplicate():
+    """The acceptance scenario: ack lands, every API pod dies, the client
+    resubmits the same request_id — same job id, one job document."""
+    p = boot(seed=2)
+    h1 = submit(p, train_spec(total_steps=50))
+    for pod in ("api-0", "api-1"):
+        p.kill_pod(pod)
+    p.run(10)                              # deployment restarts replicas
+    h2 = submit(p, train_spec(total_steps=50), request_id=h1.request_id)
+    assert h2.job_id == h1.job_id and h2.deduplicated
+    docs = p.metadata.find(
+        "jobs", lambda d: d.get("request_id") == h1.request_id)
+    assert len(docs) == 1
+
+
+def test_resubmit_across_api_kill_mid_submit():
+    """Kill the API pod while it is mid-submit (wedged retrying against a
+    down metadata store, ack not yet produced): the client's resubmission
+    must yield exactly one job."""
+    p = boot(seed=3)
+    p.metadata.crash()
+    h1 = p.submit(train_spec(), request_id="rid-B")
+    p.run(2)                               # popped from the queue, unacked
+    assert not h1.acked
+    for pod in ("api-0", "api-1"):
+        p.kill_pod(pod)                    # in-flight submission dies
+    p.metadata.restart()
+    p.run(10)
+    h2 = submit(p, train_spec(), request_id="rid-B", run=10)
+    docs = p.metadata.find("jobs", lambda d: d.get("request_id") == "rid-B")
+    assert len(docs) == 1
+    assert docs[0]["id"] == h2.job_id
+
+
+# ---------------------------------------------------------------------------
+# Metadata-backed job-id allocation
+# ---------------------------------------------------------------------------
+def test_job_ids_do_not_bleed_across_platforms():
+    """The old module-global counter made a second platform in the same
+    process start at job-0002; ids now come from each platform's own
+    metadata store."""
+    p1, p2 = boot(seed=4), boot(seed=5)
+    h1 = submit(p1, train_spec())
+    h2 = submit(p2, train_spec())
+    assert h1.job_id == "job-0001"
+    assert h2.job_id == "job-0001"
+
+
+def test_job_ids_survive_api_pod_restart():
+    p = boot(seed=6)
+    h1 = submit(p, train_spec())
+    for pod in ("api-0", "api-1"):
+        p.kill_pod(pod)
+    p.run(10)
+    h2 = submit(p, train_spec())
+    assert h2.job_id != h1.job_id          # no collision after restart
+    assert h2.job_id > h1.job_id           # counter never rewinds
+
+
+# ---------------------------------------------------------------------------
+# list: filtering + pagination
+# ---------------------------------------------------------------------------
+def test_list_filters_and_paginates():
+    p = boot(seed=7)
+    p.tenancy.add_tenant("acme", gpu_quota=64)
+    for i in range(3):
+        submit(p, train_spec(name=f"t{i}"), run=2)
+    sv = JobSpec(name="sv", kind="serve", tenant="acme",
+                 framework="qwen3-0.6b",
+                 serve=ServeSpec(requests=0, request_time_s=0.2))
+    hs = submit(p, sv, run=2)
+    p.run(5)
+
+    jobs, _ = p.client.list(kind="serve")
+    assert [j["id"] for j in jobs] == [hs.job_id]
+    jobs, _ = p.client.list(tenant="acme")
+    assert [j["id"] for j in jobs] == [hs.job_id]
+    assert p.client.list(state="COMPLETED")[0] == []
+
+    # paginate in pages of 2 over all four jobs; no dupes, full coverage
+    seen, token = [], None
+    while True:
+        page, token = p.client.list(limit=2, page_token=token)
+        seen += [j["id"] for j in page]
+        if token is None:
+            break
+    assert len(seen) == len(set(seen)) == 4
+
+
+# ---------------------------------------------------------------------------
+# serve + dryrun kinds are first-class platform jobs
+# ---------------------------------------------------------------------------
+def test_serve_job_quota_metering_completion():
+    """Acceptance: a serve-kind job submitted via ApiClient reaches a
+    terminal state with quota reserved and GPU-seconds metered."""
+    p = boot(seed=8)
+    spec = JobSpec(name="sv", kind="serve", framework="qwen3-0.6b",
+                   resources=Resources(replicas=2, gpus_per_replica=2),
+                   serve=ServeSpec(requests=200, request_time_s=0.2))
+    h = submit(p, spec)
+    p.run(15)                              # servers deployed and serving
+    assert p.client.get(h.job_id)["kind"] == "serve"
+    assert p.tenancy.allocated.get("default", 0) == 4      # quota reserved
+    mid = p.client.gpu_seconds("default")
+    assert mid > 0                         # in-flight metering (satellite)
+    assert p.run_until_terminal(h.job_id, timeout=600) == "COMPLETED"
+    assert p.client.gpu_seconds("default") >= mid
+    assert p.tenancy.allocated.get("default", 0) == 0      # released
+    assert p.volumes.active() == []
+    assert "server 0" in p.client.logs(h.job_id, 0)
+
+
+def test_serve_job_halt_and_server_restart():
+    p = boot(seed=9)
+    spec = JobSpec(name="svc", kind="serve", framework="qwen3-0.6b",
+                   serve=ServeSpec(requests=0))   # serve until halted
+    h = submit(p, spec)
+    p.run(30)
+    assert p.client.get(h.job_id)["state"] == "PROCESSING"
+    assert p.kill_pod(f"server-{h.job_id}-0")     # replica recreated in place
+    p.run(30)
+    assert p.client.get(h.job_id)["restarts"] >= 1
+    p.client.halt(h.job_id)
+    assert p.run_until_terminal(h.job_id, timeout=300) == "HALTED"
+    assert p.tenancy.allocated.get("default", 0) == 0
+    assert p.volumes.active() == []
+
+
+def test_serve_job_honors_tenant_quota():
+    p = boot(seed=10)
+    p.tenancy.add_tenant("small", gpu_quota=2)
+    spec = JobSpec(name="big-serve", kind="serve", tenant="small",
+                   framework="qwen3-0.6b",
+                   resources=Resources(replicas=4, gpus_per_replica=1),
+                   serve=ServeSpec(requests=10))
+    h = submit(p, spec)
+    assert p.run_until_terminal(h.job_id, timeout=300) == "FAILED"
+    assert p.tenancy.allocated.get("small", 0) == 0
+
+
+def test_dryrun_job_publishes_artifacts():
+    p = boot(seed=11)
+    spec = JobSpec(name="sweep", kind="dryrun",
+                   resources=Resources(replicas=1, gpus_per_replica=0),
+                   dryrun=DryRunSpec(cells=(
+                       SweepCell("qwen3-0.6b", "decode_32k"),
+                       SweepCell("gemma2-9b", "train_4k", multi_pod=True))))
+    h = submit(p, spec)
+    assert p.run_until_terminal(h.job_id, timeout=300) == "COMPLETED"
+    keys = p.objectstore.list_prefix(f"cos/{h.job_id}/dryrun/")
+    assert keys == [
+        f"cos/{h.job_id}/dryrun/gemma2-9b__train_4k__2x16x16.json",
+        f"cos/{h.job_id}/dryrun/qwen3-0.6b__decode_32k__16x16.json"]
+    assert p.volumes.active() == []
+
+
+# ---------------------------------------------------------------------------
+# Validation at the gateway
+# ---------------------------------------------------------------------------
+def test_unknown_framework_rejected_at_submission():
+    p = boot(seed=12)
+    h = p.submit(JobSpec(name="bad", framework="caffe-nope"))
+    p.run(3)
+    assert h.rejected and "unknown framework" in h.rejected
+    assert not h.acked
+    assert p.metadata.find("jobs", lambda d: True) == []
+
+
+@pytest.mark.parametrize("spec, needle", [
+    (JobSpec(name="s", train=TrainSpec(total_steps=0)), "total_steps"),
+    (JobSpec(name="s", max_restarts=-1), "max_restarts"),
+    (JobSpec(name="s", resources=Resources(replicas=0)), "replicas"),
+    (JobSpec(name="s", kind="serve", serve=ServeSpec(gen=0)), "gen"),
+    (JobSpec(name="s", kind="dryrun"), "cells"),
+    (JobSpec(name="s", kind="serve",
+             serve=ServeSpec(continuous=True, cache_layout="dense")),
+     "paged"),
+    (JobSpec(name="s", kind="train", serve=ServeSpec(batch=8)),
+     "spec block"),        # mismatched block must be rejected, not ignored
+])
+def test_invalid_specs_rejected(spec, needle):
+    p = boot(seed=13)
+    h = p.submit(spec)
+    p.run(3)
+    assert h.rejected and needle in h.rejected, h.rejected
+
+
+# ---------------------------------------------------------------------------
+# Uniform verb semantics
+# ---------------------------------------------------------------------------
+def test_uniform_not_found_semantics():
+    p = boot(seed=14)
+    for call in (p.client.get, p.client.events, p.client.logs,
+                 p.client.halt, p.client.delete):
+        with pytest.raises(JobNotFound):
+            call("job-9999")
+
+
+def test_delete_terminal_only():
+    p = boot(seed=15)
+    h = submit(p, train_spec(total_steps=2000))
+    p.run(10)
+    with pytest.raises(InvalidJobState):
+        p.client.delete(h.job_id)          # still running
+    p.client.halt(h.job_id)
+    assert p.run_until_terminal(h.job_id, timeout=300) == "HALTED"
+    p.client.delete(h.job_id)
+    with pytest.raises(JobNotFound):
+        p.client.get(h.job_id)
+
+
+# ---------------------------------------------------------------------------
+# v1 manifest shim
+# ---------------------------------------------------------------------------
+def test_manifest_to_jobspec_equivalence():
+    m = JobManifest(name="legacy", tenant="default", framework="gemma2-9b",
+                    learners=3, gpus_per_learner=2, total_steps=77,
+                    step_time_s=0.3, checkpoint_interval_s=9.0,
+                    max_restarts=5, elastic=True, priority=2,
+                    dataset_gb=2.5, real_compute=False, seed=7,
+                    extras={"recovery_mode": "rejoin"})
+    s = m.to_jobspec()
+    assert s.kind == "train" and s.framework == m.framework
+    assert (s.learners, s.gpus_per_learner) == (3, 2)
+    assert s.total_steps == 77 and s.step_time_s == 0.3
+    assert s.checkpoint_interval_s == 9.0 and s.max_restarts == 5
+    assert s.elastic and s.priority == 2 and s.seed == 7
+    assert s.dataset_gb == 2.5 and s.recovery_mode == "rejoin"
+    # doc round-trip is lossless (what Mongo stores is what the LCM reads)
+    assert JobSpec.from_doc(s.to_doc()) == s
+
+
+def test_manifest_and_spec_submissions_equivalent():
+    """A v1 manifest and its converted spec must produce identical job
+    documents (modulo ids/timestamps) and identical outcomes."""
+    m = JobManifest(name="eq", learners=2, total_steps=15, step_time_s=0.2)
+    p = boot(seed=16)
+    h1 = submit(p, m)
+    h2 = submit(p, m.to_jobspec())
+    assert p.run_until_terminal(h1.job_id, timeout=600) == "COMPLETED"
+    assert p.run_until_terminal(h2.job_id, timeout=600) == "COMPLETED"
+    d1 = p.metadata.get("jobs", h1.job_id)
+    d2 = p.metadata.get("jobs", h2.job_id)
+    assert d1["spec"] == d2["spec"]
+    assert d1["kind"] == d2["kind"] == "train"
+
+
+def test_legacy_v1_job_documents_still_reconcile():
+    """Job docs persisted before the redesign carry ``manifest`` instead of
+    ``spec`` — the LCM must still run them (upgrade path)."""
+    from dataclasses import asdict
+    p = boot(seed=17)
+    m = JobManifest(name="old-doc", learners=1, total_steps=10,
+                    step_time_s=0.2)
+    doc = {"id": "job-legacy", "manifest": asdict(m), "state": "SUBMITTED",
+           "desired_state": "RUNNING", "restarts": 0,
+           "events": [{"t": p.sim.now, "event": "SUBMITTED"}]}
+    p.metadata.insert("jobs", "job-legacy", doc)
+    assert p.run_until_terminal("job-legacy", timeout=300) == "COMPLETED"
+
+
+# ---------------------------------------------------------------------------
+# Satellite fixes
+# ---------------------------------------------------------------------------
+def test_network_policy_prefix_anchored():
+    """job-001 must not reach into cos/job-0010/... (prefix confusion)."""
+    labels = {"role": "learner", "job": "job-001", "tenant": "t1"}
+    assert NetworkPolicy.allowed(labels, "cos/job-001/logs/0")
+    assert NetworkPolicy.allowed(labels, "cos/job-001")
+    assert not NetworkPolicy.allowed(labels, "cos/job-0010/logs/0")
+    assert not NetworkPolicy.allowed(labels, "cos/job-0010")
+    assert NetworkPolicy.allowed(labels, "cos/datasets/imagenet")
+    assert not NetworkPolicy.allowed(labels, "cos/datasets-private/x")
+    # server and dryrun pods are workload roles, equally restricted
+    for role in ("server", "dryrun"):
+        lbl = {"role": role, "job": "job-001"}
+        assert not NetworkPolicy.allowed(lbl, "mongo")
+        assert not NetworkPolicy.allowed(lbl, "cos/job-0010/x")
+        assert NetworkPolicy.allowed(lbl, "cos/job-001/x")
+
+
+def test_dedup_is_tenant_scoped():
+    """Tenant B reusing tenant A's request_id must get its OWN job, never
+    a handle onto A's job."""
+    p = boot(seed=21)
+    p.tenancy.add_tenant("acme", gpu_quota=64)
+    a = train_spec(name="a")
+    b = JobSpec(name="b", kind="train", tenant="acme",
+                resources=Resources(1, 1),
+                train=TrainSpec(step_time_s=0.2, total_steps=10))
+    ha = submit(p, a, request_id="retry-1")
+    hb = submit(p, b, request_id="retry-1")
+    assert hb.job_id != ha.job_id and not hb.deduplicated
+    # same tenant + same rid still dedups
+    ha2 = submit(p, a, request_id="retry-1")
+    assert ha2.job_id == ha.job_id and ha2.deduplicated
+
+
+def test_serve_gang_serves_exactly_requests():
+    """Claim-then-serve: a 3-replica gang must serve exactly ``requests``,
+    not overshoot by stale reads of the shared counter."""
+    import re
+    p = boot(seed=22)
+    spec = JobSpec(name="exact", kind="serve", framework="qwen3-0.6b",
+                   resources=Resources(replicas=3, gpus_per_replica=1),
+                   serve=ServeSpec(requests=10, request_time_s=0.3))
+    h = submit(p, spec)
+    assert p.run_until_terminal(h.job_id, timeout=600) == "COMPLETED"
+    logs = "".join(p.client.logs(h.job_id, i) for i in range(3))
+    totals = [int(m) for m in re.findall(r"\((\d+) served\)", logs)]
+    assert totals and max(totals) == 10, totals
+
+
+def test_list_limit_zero_is_empty_not_crash():
+    p = boot(seed=18)
+    submit(p, train_spec())
+    assert p.client.list(limit=0) == ([], None)
+
+
+def test_two_clients_do_not_dedup_each_other():
+    """Auto request_ids are unique per PLATFORM: a second ApiClient must
+    not silently collide with the first client's submissions."""
+    from repro.core.api import ApiClient
+    p = boot(seed=19)
+    c2 = ApiClient(p)
+    h1 = submit(p, train_spec(name="a"))
+    h2 = c2.submit(train_spec(name="b"))
+    p.run(5)
+    assert h2.acked and h2.job_id != h1.job_id and not h2.deduplicated
+
+
+def test_guardian_exhaustion_settles_metering():
+    """Guardian backoff exhaustion FAILs the job via the LCM reaper —
+    which must stop the meter, or the dead job accrues in-flight
+    GPU-seconds forever."""
+    p = boot(seed=20)
+    h = submit(p, train_spec(total_steps=1000, step_time_s=0.5,
+                             resources=Resources(2, 1)))
+
+    def keep_killing():
+        p.kill_pod(f"guardian-{h.job_id}")
+        p.sim.schedule(2.0, keep_killing)
+    keep_killing()
+    assert p.run_until_terminal(h.job_id, timeout=400) == "FAILED"
+    settled = p.client.gpu_seconds("default")
+    p.run(50)
+    assert p.client.gpu_seconds("default") == pytest.approx(settled)
+
+
+def test_metering_counts_in_flight_usage():
+    m = Metering()
+    m.job_started("j1", "acme", gpus=4, now=100.0)
+    assert m.gpu_seconds("acme") == 0.0            # legacy view: settled only
+    assert m.gpu_seconds("acme", now=110.0) == pytest.approx(40.0)
+    m.job_stopped("j1", now=120.0)
+    assert m.gpu_seconds("acme", now=500.0) == pytest.approx(80.0)

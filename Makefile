@@ -3,7 +3,7 @@
 
 PY ?= python
 
-.PHONY: verify lint serve-smoke dryrun
+.PHONY: verify lint serve-smoke bench-smoke dryrun
 
 verify: lint
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -21,6 +21,12 @@ serve-smoke:
 		--prompt-len 16 --gen 8
 	PYTHONPATH=src $(PY) -m repro.launch.serve --reduced --batch 2 \
 		--prompt-len 16 --gen 8 --continuous --requests 4
+
+# Decode-kernel regression gate: tiny-shape interpret-mode run of the
+# serve-decode lane (kernel ≡ reference check + modeled-bytes assertions).
+# Never rewrites the checked-in BENCH_serve_decode.json.
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.serve_decode --smoke
 
 dryrun:
 	PYTHONPATH=src $(PY) -m repro.launch.dryrun --all

@@ -61,12 +61,23 @@ def roofline_row(arch: str, shape: str) -> dict | None:
     t_comp = ex["flops"] / PEAK_FLOPS
     t_mem = ex["bytes"] / HBM_BW
     t_coll = wire / ICI_BW
+    row = {}
+    if dr.get("kind") == "decode" and _kernel_applies(arch):
+        # Paged-decode pricing: the dry-run HLO walks the cache at the
+        # dense/table-bounded rate, but the serving hot path is the paged
+        # flash-decode kernel, which touches only *resident* pages.
+        # Re-price the memory term by swapping the dense-view attention
+        # bytes for the kernel's resident-page bytes (per device).  MLA
+        # archs keep the HLO pricing — their latent cache has no paged
+        # decode walk yet (ROADMAP).
+        row.update(_paged_decode_pricing(arch, shape, ex["bytes"]))
+        t_mem = row["t_memory_paged_s"]
     terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
     dominant = max(terms, key=terms.get)
     mf = model_flops_per_device(dr)
     step_time = max(terms.values())            # no-overlap upper bound
     mfu = mf / PEAK_FLOPS / step_time if step_time else 0.0
-    return {
+    row.update({
         "arch": arch, "shape": shape,
         "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
         "dominant": dominant,
@@ -75,6 +86,41 @@ def roofline_row(arch: str, shape: str) -> dict | None:
         "useful_ratio": mf / ex["flops"] if ex["flops"] else 0.0,
         "roofline_mfu": mfu,
         "temp_bytes_dev": dr.get("memory", {}).get("temp_size_in_bytes"),
+    })
+    return row
+
+
+def _kernel_applies(arch: str) -> bool:
+    """Paged flash-decode prices GQA page pools; MLA (latent cache) and
+    attention-free stacks keep the raw HLO memory term."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    return cfg.uses_attention and not cfg.use_mla
+
+
+def _paged_decode_pricing(arch: str, shape: str, hlo_bytes_dev: float) -> dict:
+    """Kernel-vs-dense decode bandwidth for one cell: per-device attention
+    bytes under the dense-view walk and the paged kernel (resident pages,
+    serving occupancy from the cell's RunConfig), plus the re-priced
+    memory term and the kernel's arithmetic intensity."""
+    import dataclasses as _dc
+
+    from repro.configs import SHAPES, get_config, get_run_config
+    from repro.launch.specs import (
+        decode_arithmetic_intensity, decode_attn_bytes)
+
+    cfg = _dc.replace(get_config(arch), cache_layout="paged")
+    sh = SHAPES[shape]
+    run = get_run_config(arch, shape)
+    dense_dev = decode_attn_bytes(cfg, sh, run, "dense") / CHIPS
+    kern_dev = decode_attn_bytes(cfg, sh, run, "kernel") / CHIPS
+    adj = max(hlo_bytes_dev - dense_dev + kern_dev, kern_dev)
+    return {
+        "attn_bytes_dense_dev": dense_dev,
+        "attn_bytes_kernel_dev": kern_dev,
+        "t_memory_paged_s": adj / HBM_BW,
+        "kernel_ai_flops_per_byte": decode_arithmetic_intensity(
+            cfg, sh, run, "kernel"),
     }
 
 
@@ -100,7 +146,7 @@ def main():
               "`python -m repro.launch.analysis` to populate artifacts/)")
         return
     print("arch,shape,t_compute_ms,t_memory_ms,t_collective_ms,dominant,"
-          "useful_flops_ratio,roofline_mfu,temp_GB")
+          "useful_flops_ratio,roofline_mfu,temp_GB,kernel_ai")
     for r in rows:
         if r.get("missing"):
             print(f"{r['arch']},{r['shape']},MISSING,,,,")
@@ -111,11 +157,13 @@ def main():
         if r.get("error"):
             print(f"{r['arch']},{r['shape']},ERROR,,,,")
             continue
+        ai = r.get("kernel_ai_flops_per_byte")
         print(f"{r['arch']},{r['shape']},"
               f"{r['t_compute_s']*1e3:.1f},{r['t_memory_s']*1e3:.1f},"
               f"{r['t_collective_s']*1e3:.1f},{r['dominant']},"
               f"{r['useful_ratio']:.3f},{r['roofline_mfu']:.3f},"
-              f"{(r['temp_bytes_dev'] or 0)/1e9:.1f}")
+              f"{(r['temp_bytes_dev'] or 0)/1e9:.1f},"
+              f"{'' if ai is None else f'{ai:.2f}'}")
 
 
 if __name__ == "__main__":

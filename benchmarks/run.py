@@ -37,11 +37,22 @@ def main() -> None:
 
     print()
     print("=" * 72)
+    print("# Serve decode — paged flash-decode vs reference walk "
+          "(bytes/step + tok/s)")
+    print("=" * 72)
+    from benchmarks import serve_decode
+    failures = serve_decode.main(["--smoke"] if args.quick else [])
+
+    print()
+    print("=" * 72)
     print("# Roofline — per (arch × shape), single-pod 16x16 "
           "(from dry-run artifacts)")
     print("=" * 72)
     from benchmarks import roofline
     roofline.main()
+
+    if failures:
+        sys.exit(1)                  # propagate serve-decode FAIL to CI
 
 
 if __name__ == "__main__":

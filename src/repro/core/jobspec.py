@@ -81,6 +81,8 @@ class ServeSpec:
     continuous: bool = False                  # continuous batching (paged)
     requests: int = 8                         # 0 = serve until halted
     page_budget: int = 0                      # 0 = worst case
+    use_pallas: bool = False                  # paged flash-decode kernel
+    ragged_prefill: Optional[bool] = None     # None = auto (attn-only archs)
     # platform-sim knob (virtual servers)
     request_time_s: float = 0.2
 

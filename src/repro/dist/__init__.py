@@ -15,7 +15,10 @@ from repro.dist.compression import (  # noqa: F401
     CompressionConfig,
     compress_grads,
     init_error_buffers,
+    pack_int8,
     resolve_compression,
+    unpack_int8,
+    wire_bytes_int8,
 )
 from repro.dist.mesh import (  # noqa: F401
     axis_sizes,

@@ -13,9 +13,14 @@ cumulative transmitted gradient exact:
 
 Two schemes, selected by :class:`CompressionConfig`:
 
-* ``int8`` — per-tensor max-abs scaling to int8 levels (the wire format
-  would be 1 byte/element + 1 scale; we model the *values* end-to-end so
-  the optimizer sees exactly what a real transport would deliver).
+* ``int8`` — max-abs scaling to int8 levels, **actually packed**: the
+  values path round-trips through :func:`pack_int8` / :func:`unpack_int8`
+  (1 byte/element int8 payload + one fp32 scale per chunk), so the
+  optimizer sees exactly what the int8 all-reduce wire would deliver and
+  the payload the transport would ship exists as a real ``int8`` array.
+  ``chunk_size=0`` (default) scales per tensor; a positive chunk size
+  gives per-chunk scales (finer dynamic range on large tensors, one extra
+  fp32 per chunk of wire).
 * ``topk`` — magnitude top-k sparsification (send the largest ``ratio``
   fraction of |grad + err|, accumulate the rest).
 
@@ -38,10 +43,13 @@ class CompressionConfig:
     kind: str = "int8"         # int8 | topk | none
     topk_ratio: float = 0.05   # fraction of entries kept per tensor (topk)
     levels: int = 127          # quantization levels per sign (int8)
+    chunk_size: int = 0        # int8 scale granularity; 0 = per tensor
 
     def __post_init__(self):
         if self.kind not in ("int8", "topk", "none"):
             raise ValueError(f"unknown compression kind {self.kind!r}")
+        if self.chunk_size < 0:
+            raise ValueError(f"chunk_size must be >= 0, got {self.chunk_size}")
 
 
 def resolve_compression(
@@ -64,11 +72,55 @@ def init_error_buffers(params: Tree) -> Tree:
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
+def pack_int8(t: jax.Array, cfg: Optional[CompressionConfig] = None,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Quantize a tensor to the int8 wire format.
+
+    Returns ``(payload, scales)``: ``payload`` is a flat ``int8`` array of
+    ``ceil(size/chunk)·chunk`` entries (zero-padded tail) — the bytes the
+    all-reduce would put on the wire — and ``scales`` is one fp32 max-abs
+    scale per chunk (``chunk_size=0``: a single chunk spanning the
+    tensor).  A zero chunk packs to scale 0 and decodes to exact zeros."""
+    cfg = cfg or CompressionConfig()
+    flat = t.astype(jnp.float32).ravel()
+    chunk = cfg.chunk_size or flat.size
+    pad = (-flat.size) % chunk
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, chunk)
+    scales = jnp.max(jnp.abs(blocks), axis=1) / cfg.levels      # (n_chunks,)
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]),
+                 -cfg.levels, cfg.levels).astype(jnp.int8)
+    return q.ravel(), scales
+
+
+def unpack_int8(payload: jax.Array, scales: jax.Array, shape,
+                dtype=jnp.float32) -> jax.Array:
+    """Decode the int8 wire format back to values (``shape`` drops the
+    pack-time zero padding)."""
+    import numpy as np
+    n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    blocks = payload.reshape(scales.shape[0], -1).astype(jnp.float32)
+    vals = blocks * jnp.where(scales > 0, scales, 0.0)[:, None]
+    return vals.ravel()[:n].reshape(shape).astype(dtype)
+
+
+def wire_bytes_int8(t: jax.Array, cfg: Optional[CompressionConfig] = None,
+                    ) -> int:
+    """Bytes an int8-compressed all-reduce puts on the wire for ``t``:
+    1 byte/element (padded to the chunk) + 4 bytes per chunk scale."""
+    cfg = cfg or CompressionConfig()
+    chunk = cfg.chunk_size or t.size
+    n_chunks = -(-t.size // chunk) if t.size else 0
+    return n_chunks * chunk + 4 * n_chunks
+
+
 def _int8_leaf(t: jax.Array, cfg: CompressionConfig) -> jax.Array:
-    scale = jnp.max(jnp.abs(t)) / cfg.levels
-    safe = jnp.where(scale > 0, scale, 1.0)
-    q = jnp.clip(jnp.round(t / safe), -cfg.levels, cfg.levels)
-    return jnp.where(scale > 0, q * safe, jnp.zeros_like(t))
+    # the values path IS the wire path: quantize to the packed int8
+    # payload + per-chunk scales, then decode what the wire delivers
+    payload, scales = pack_int8(t, cfg)
+    return unpack_int8(payload, scales, t.shape, t.dtype)
 
 
 def _topk_leaf(t: jax.Array, cfg: CompressionConfig) -> jax.Array:

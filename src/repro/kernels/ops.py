@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.paged_attention import paged_decode_attention as _paged
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 from repro.kernels.rwkv6_wkv import wkv6 as _wkv6
 
@@ -46,6 +47,28 @@ def flash_attention_bshd(
                  q_blk=min(q_blk, S), kv_blk=min(kv_blk, S),
                  interpret=_interpret())
     return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "logit_cap"))
+def paged_decode_bhd(
+    q: jax.Array,            # (B, 1, H, hd) — one new token per sequence
+    k_pages: jax.Array,      # (P, K, ps, hd) shared physical pool
+    v_pages: jax.Array,      # (P, K, ps, hd)
+    page_table: jax.Array,   # (B, pps) int32; -1 = unallocated
+    pos_q: jax.Array,        # (B,) int32; -1 = inactive slot
+    *,
+    scale: float,
+    logit_cap: float = 0.0,
+) -> jax.Array:
+    """Model-layout wrapper for the paged flash-decode kernel: regroup the
+    q heads per kv head, run the kernel (interpret mode off-TPU), ungroup."""
+    B, _, H, hd = q.shape
+    K = k_pages.shape[1]
+    qg = q.reshape(B, K, H // K, hd)
+    out = _paged(qg, k_pages, v_pages, page_table.astype(jnp.int32),
+                 pos_q.astype(jnp.int32), scale=scale, logit_cap=logit_cap,
+                 interpret=_interpret())
+    return out.reshape(B, 1, H, hd)
 
 
 @jax.jit

@@ -1,0 +1,212 @@
+"""Paged-attention decode (flash-decode over the page table).
+
+One new token per sequence attends a vLLM-style paged KV cache: a shared
+physical pool ``(P, K, page_size, hd)`` plus per-sequence page tables
+``(B, pages_per_seq)``.  The *reference* walk
+(``models.attention.decode_attention_paged``) gathers the table-bounded
+dense ``(B, pps·ps, K, hd)`` view every step — transient bandwidth scales
+with the table length, not with what the sequence actually holds.  Both
+implementations here are **O(live pages)**: they walk each sequence's
+pages with a running online-softmax ``(m, l, acc)`` and never materialize
+the gathered view.
+
+* :func:`paged_decode_attention` — the Pallas TPU kernel.  Grid
+  ``(batch, kv_head, page)`` with the page dim minormost/sequential so the
+  running state lives in VMEM scratch; the page table and per-sequence
+  positions are **scalar-prefetched** so the BlockSpec index map can DMA
+  exactly the physical page each grid step needs.  Pages past the last
+  live one (slot ``t`` holds position ``t``, so pages ``> pos_q // ps``
+  are dead weight) re-map to the last live page — the block index repeats,
+  Pallas issues no new copy, and the tail of a mostly-empty table costs
+  nothing.  Runs in interpret mode off-TPU (CPU tests).
+* :func:`paged_decode_jnp` — a ``lax.scan`` fallback with the same
+  contract and the same O(pages) transient footprint, for serving without
+  ``use_pallas`` (the scan carries one ``(B, K, ps, hd)`` page gather per
+  step instead of the whole table).
+
+Masking rules (shared by both, and by the reference):
+
+* slot ``t`` of a sequence holds absolute position ``t`` — a key is live
+  iff ``t <= pos_q`` *and* its page-table entry is allocated (``>= 0``);
+* ``pos_q < 0`` marks an inactive continuous-batching slot: every key is
+  masked and the output row is **zero** (the reference's plain softmax
+  returns a garbage average there instead; callers ignore those rows);
+* unallocated entries (``-1``) cost no bandwidth — the kernel's index
+  map re-maps them to an already-fetched live page (no new DMA) and the
+  fallback's ``take`` fills with zeros without reading the pool (the
+  clamp-to-page-0 of the old reference paid page 0's bandwidth for
+  every hole).
+
+Layouts: q ``(B, K, G, hd)`` (G = query heads per kv head), pool
+``(P, K, ps, hd)``, table ``(B, pps)`` int32, pos_q ``(B,)`` int32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+NEG_INF = -2.0e38
+
+
+def _decode_kernel(pt_ref, pq_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_s, l_s, acc_s, *,
+                   scale: float, logit_cap: float, ps: int, n_pages: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    pq = pq_ref[b]
+    live = jnp.logical_and(pq >= 0,
+                           jnp.logical_and(i * ps <= pq, pt_ref[b, i] >= 0))
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                # (ps, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, ps)
+        if logit_cap:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        t = i * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = t <= pq
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        # mask p explicitly: a fully-dead row would otherwise see
+        # exp(NEG_INF - NEG_INF) == 1 (NEG_INF is a finite sentinel)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+            p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())))
+        m_s[...] = m_new
+
+    @pl.when(i == n_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_s[...] /
+                       jnp.maximum(l_s[...], 1e-37)).astype(o_ref.dtype)
+
+
+def _page_block(b, i, pt_ref, pq_ref, ps: int):
+    """Physical page for grid step (b, ·, i).  Dead tail pages (beyond the
+    last live page) re-map to the last live page: the block index repeats
+    across those steps, so the pipeline issues no new DMA for them.
+    A -1 hole *inside* the live prefix (never produced by the allocator's
+    contiguous-prefix tables, but legal input) borrows the last live
+    page's entry — an already-fetched page, not physical page 0, so holes
+    cost no extra bandwidth; compute is skipped either way.  Inactive
+    rows (pos < 0, table all -1) clamp to page 0 with all compute
+    skipped."""
+    last_live = jnp.maximum(pq_ref[b], 0) // ps
+    ii = jnp.minimum(i, last_live)
+    entry = pt_ref[b, ii]
+    entry = jnp.where(entry >= 0, entry, pt_ref[b, last_live])
+    return jnp.maximum(entry, 0)
+
+
+def paged_decode_attention(
+    q: jax.Array,            # (B, K, G, hd)
+    k_pages: jax.Array,      # (P, K, ps, hd)
+    v_pages: jax.Array,      # (P, K, ps, hd)
+    page_table: jax.Array,   # (B, pps) int32; -1 = unallocated
+    pos_q: jax.Array,        # (B,) int32; -1 = inactive slot
+    *,
+    scale: float,
+    logit_cap: float = 0.0,
+    interpret: bool = False,
+) -> jax.Array:
+    B, K, G, hd = q.shape
+    ps = k_pages.shape[2]
+    pps = page_table.shape[1]
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, logit_cap=logit_cap, ps=ps, n_pages=pps)
+    def kv_map(b, h, i, pt, pq):
+        return (_page_block(b, i, pt, pq, ps), h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, pps),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, i, pt, pq: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd), kv_map),
+            pl.BlockSpec((1, 1, ps, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, i, pt, pq: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), pos_q.astype(jnp.int32), q,
+      k_pages, v_pages)
+
+
+def paged_decode_jnp(
+    q: jax.Array,            # (B, K, G, hd)
+    k_pages: jax.Array,      # (P, K, ps, hd)
+    v_pages: jax.Array,      # (P, K, ps, hd)
+    page_table: jax.Array,   # (B, pps) int32; -1 = unallocated
+    pos_q: jax.Array,        # (B,) int32; -1 = inactive slot
+    *,
+    scale: float,
+    logit_cap: float = 0.0,
+) -> jax.Array:
+    """Same contract as the kernel, pure jnp: ``lax.scan`` over logical
+    pages carrying (m, l, acc) — transient memory is one (B, K, ps, hd)
+    page gather per step, not the (B, pps·ps, K, hd) view."""
+    B, K, G, hd = q.shape
+    ps = k_pages.shape[2]
+    pps = page_table.shape[1]
+    qf = q.astype(jnp.float32) * scale
+    pq = pos_q.astype(jnp.int32)
+
+    def body(carry, i):
+        m, l, acc = carry
+        entry = jax.lax.dynamic_index_in_dim(page_table, i, axis=1,
+                                             keepdims=False)     # (B,)
+        # fill-mode gather: -1 is out of bounds -> zeros, page 0 untouched
+        kb = jnp.take(k_pages, entry, axis=0, mode="fill",
+                      fill_value=0).astype(jnp.float32)          # (B,K,ps,hd)
+        vb = jnp.take(v_pages, entry, axis=0, mode="fill",
+                      fill_value=0).astype(jnp.float32)
+        s = jnp.einsum("bkgd,bktd->bkgt", qf, kb)                # (B,K,G,ps)
+        if logit_cap:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        t = i * ps + jnp.arange(ps, dtype=jnp.int32)
+        valid = (entry[:, None] >= 0) & (t[None, :] <= pq[:, None])  # (B,ps)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.where(valid[:, None, None, :],
+                      jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bkgt,bktd->bkgd", p, vb)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G), jnp.float32)
+    a0 = jnp.zeros((B, K, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  jnp.arange(pps, dtype=jnp.int32))
+    return (acc / jnp.maximum(l, 1e-37)[..., None]).astype(q.dtype)

@@ -203,10 +203,19 @@ def run_continuous(cfg, ctx, params, sv: ServeSpec, seed: int = 0) -> int:
     """Continuous batching over the paged cache: a queue of requests with
     varying generation lengths is admitted per-request whenever the page
     allocator can reserve the request's worst-case pages; finished requests
-    free their pages immediately, letting the next one in."""
+    free their pages immediately, letting the next one in.
+
+    Attention-only architectures take the *ragged* prefill path: every
+    request admitted in a round is prefilled in ONE batched call padded to
+    the round's max prompt length (bucketed to a page multiple to bound
+    recompiles), with per-row ``lengths`` masking the cache writes — no
+    per-request slot-view prefill, and prompts are no longer padded to the
+    queue-wide maximum.  Recurrent / RWKV stacks keep the per-request
+    slot-view prefill (their carries would scan the padding)."""
     import jax
     import jax.numpy as jnp
 
+    from repro.configs.base import GLOBAL_ATTN, LOCAL_ATTN
     from repro.models.model import (
         cache_slot_merge, cache_slot_view, init_cache, num_pages)
     from repro.train.steps import make_serve_steps
@@ -216,6 +225,11 @@ def run_continuous(cfg, ctx, params, sv: ServeSpec, seed: int = 0) -> int:
     if cfg.use_mla or cfg.is_encoder_decoder:
         raise SystemExit("--continuous needs per-sequence decode positions; "
                          "MLA / enc-dec caches are lockstep-only")
+    attn_only = set(cfg.layer_kinds()) <= {GLOBAL_ATTN, LOCAL_ATTN}
+    ragged = attn_only if sv.ragged_prefill is None else sv.ragged_prefill
+    if ragged and not attn_only:
+        raise SystemExit("--ragged-prefill needs an attention-only decoder; "
+                         "recurrent/RWKV state would scan the padding")
 
     B, P, G = sv.batch, sv.prompt_len, sv.gen
     max_len = P + G
@@ -231,6 +245,10 @@ def run_continuous(cfg, ctx, params, sv: ServeSpec, seed: int = 0) -> int:
     prompts = np.asarray(jax.random.randint(
         jax.random.key(1), (n_req, P), 0, cfg.vocab_size))
     gen_lens = rng.integers(max(G // 2, 1), G + 1, size=n_req)
+    # ragged workload: per-request prompt lengths in [P/2, P]; the lockstep
+    # fallback serves every prompt at full length P
+    prompt_lens = rng.integers(max(P // 2, 1), P + 1, size=n_req) if ragged \
+        else np.full(n_req, P, np.int64)
 
     prefill, decode = make_serve_steps(cfg, ctx)
     cache = init_cache(cfg, B, max_len, layout="paged", page_budget=budget,
@@ -269,11 +287,12 @@ def run_continuous(cfg, ctx, params, sv: ServeSpec, seed: int = 0) -> int:
 
     while len(done) < n_req:
         # ---- admission: one request per free slot, if pages are available
+        admitted: List[tuple] = []           # (slot, request) this round
         for b in range(B):
             if slots[b] is not None or next_req >= n_req:
                 continue
             r = next_req
-            need = num_pages(P + int(gen_lens[r]), ps)
+            need = num_pages(int(prompt_lens[r]) + int(gen_lens[r]), ps)
             pages = pool.alloc(need, shard=b * n_shards // B)
             if pages is None:
                 stalled_admissions += 1
@@ -281,13 +300,33 @@ def run_continuous(cfg, ctx, params, sv: ServeSpec, seed: int = 0) -> int:
             next_req += 1
             host_table[b, :need] = pages
             host_table[b, need:] = -1
+            admitted.append((b, r, pages))
+        if admitted:
             cache = _set_page_tables(cache, host_table)
-            view = cache_slot_view(cache, B, b)
-            logits, view = prefill(
-                params, {"tokens": jnp.asarray(prompts[r][None])}, view)
-            cache = cache_slot_merge(cache, view, B, b)
-            toks[b, 0] = int(jnp.argmax(logits[0, -1]))
-            pos[b] = P
+        if admitted and ragged:
+            # one batched ragged prefill for the whole round: pad to the
+            # round max, bucketed to a page multiple (bounds recompiles)
+            round_max = max(int(prompt_lens[r]) for _, r, _ in admitted)
+            S0 = -(-round_max // ps) * ps
+            toks_in = np.zeros((B, S0), prompts.dtype)
+            lens = np.zeros((B,), np.int32)
+            for b, r, _ in admitted:
+                L = int(prompt_lens[r])
+                toks_in[b, :L] = prompts[r, :L]
+                lens[b] = L
+            logits, cache = prefill(params, {"tokens": jnp.asarray(toks_in)},
+                                    cache, jnp.asarray(lens))
+            nxt_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for b, r, pages in admitted:
+            if not ragged:
+                view = cache_slot_view(cache, B, b)
+                logits, view = prefill(
+                    params, {"tokens": jnp.asarray(prompts[r][None])}, view)
+                cache = cache_slot_merge(cache, view, B, b)
+                toks[b, 0] = int(jnp.argmax(logits[0, -1]))
+            else:
+                toks[b, 0] = int(nxt_tok[b])
+            pos[b] = int(prompt_lens[r])
             slots[b] = {"req": r, "remaining": int(gen_lens[r]) - 1,
                         "pages": pages}
             generated += 1
@@ -318,7 +357,9 @@ def run_continuous(cfg, ctx, params, sv: ServeSpec, seed: int = 0) -> int:
     jax.block_until_ready(cache)
     dt = time.time() - t0
     print(f"[serve/continuous] arch={cfg.name} requests={n_req} slots={B} "
-          f"prompt={P} gen<= {G} page_size={ps}")
+          f"prompt<= {P} gen<= {G} page_size={ps} "
+          f"prefill={'ragged' if ragged else 'per-slot'} "
+          f"decode={'pallas' if ctx.use_pallas else 'jnp-scan'}")
     print(f"  pool: {budget} pages, high-water {pool.high_water}, "
           f"admission stalls {stalled_admissions}")
     print(f"  completed {len(done)}/{n_req} in {decode_steps} decode steps, "
@@ -351,7 +392,8 @@ def _run_serve(spec: JobSpec) -> int:
         cfg = dataclasses.replace(cfg, **overrides)
 
     mesh = _make_mesh(sv.mesh)
-    ctx = Ctx(mesh=mesh, dtype=jnp.float32 if sv.reduced else jnp.bfloat16)
+    ctx = Ctx(mesh=mesh, dtype=jnp.float32 if sv.reduced else jnp.bfloat16,
+              use_pallas=sv.use_pallas)
     params = init_params(cfg, jax.random.key(spec.seed))
 
     if sv.continuous:

@@ -49,6 +49,16 @@ def parse_spec(argv=None) -> JobSpec:
     ap.add_argument("--page-budget", type=int, default=0,
                     help="physical pages in the pool (0 = worst case); "
                          "smaller budgets throttle admission")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="paged flash-decode Pallas kernel for decode "
+                         "(interpret mode off-TPU)")
+    ap.add_argument("--ragged-prefill", dest="ragged_prefill",
+                    action="store_const", const=True, default=None,
+                    help="force batched ragged prefill (default: auto for "
+                         "attention-only archs)")
+    ap.add_argument("--no-ragged-prefill", dest="ragged_prefill",
+                    action="store_const", const=False,
+                    help="force per-slot lockstep prefill")
     args = ap.parse_args(argv)
 
     return JobSpec(
@@ -67,6 +77,8 @@ def parse_spec(argv=None) -> JobSpec:
             continuous=args.continuous,
             requests=args.requests,
             page_budget=args.page_budget,
+            use_pallas=args.use_pallas,
+            ragged_prefill=args.ragged_prefill,
         ))
 
 

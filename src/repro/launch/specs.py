@@ -139,6 +139,62 @@ def decode_page_budget(cfg: ModelConfig, shape: ShapeConfig,
     return max(B, int(-(-worst * occ // 1)))
 
 
+def decode_attn_bytes(cfg: ModelConfig, shape: ShapeConfig, run=None,
+                      path: str = "kernel") -> int:
+    """Modeled HBM bytes one decode step spends reading K/V, per *global*
+    attention layer summed over the stack — the serving hot path's
+    bandwidth bound.  Three walks of the same cache:
+
+    * ``dense``     — the dense layout: B·S_max tokens per layer.
+    * ``reference`` — the paged gather walk (``decode_attention_paged``):
+      bounded by the page-*table* length, B·pps·ps tokens, regardless of
+      how many pages are live.
+    * ``kernel``    — the flash-decode kernel / scan fallback: only
+      *resident* pages are touched (``run.page_occupancy`` of the table),
+      and at least the one page holding the current position.
+
+    The ratio reference/kernel ≈ 1/occupancy is the modeled win the
+    ``serve_decode`` benchmark lane sweeps.
+    """
+    from repro.configs.base import GLOBAL_ATTN
+    from repro.models.model import num_pages
+    if path not in ("dense", "reference", "kernel"):
+        raise ValueError(path)
+    B, S = shape.global_batch, shape.seq_len
+    n_global = sum(1 for k in cfg.layer_kinds() if k == GLOBAL_ATTN)
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    isize = jnp.dtype(cfg.dtype).itemsize
+    ps = cfg.page_size
+    pps = num_pages(S, ps)
+    if path == "dense":
+        tokens = B * S
+    elif path == "reference":
+        tokens = B * pps * ps
+    else:
+        occ = getattr(run, "page_occupancy", 1.0) if run is not None else 1.0
+        tokens = B * max(int(-(-pps * occ // 1)), 1) * ps
+    return 2 * tokens * K * hd * isize * n_global          # K and V
+
+
+def decode_arithmetic_intensity(cfg: ModelConfig, shape: ShapeConfig,
+                                run=None, path: str = "kernel") -> float:
+    """FLOPs per HBM byte of the decode attention walk (one step).  The
+    useful work is fixed — 4·B·resident_tokens·H·hd MACs — so intensity
+    degrades exactly by the wasted gather bytes; the kernel's intensity is
+    occupancy-independent (it touches what it computes on)."""
+    from repro.configs.base import GLOBAL_ATTN
+    from repro.models.model import num_pages
+    B, S = shape.global_batch, shape.seq_len
+    n_global = sum(1 for k in cfg.layer_kinds() if k == GLOBAL_ATTN)
+    if not n_global:
+        return 0.0
+    occ = getattr(run, "page_occupancy", 1.0) if run is not None else 1.0
+    pps = num_pages(S, cfg.page_size)
+    resident = max(int(-(-pps * occ // 1)), 1) * cfg.page_size
+    flops = 4 * B * resident * cfg.num_heads * cfg.head_dim * n_global
+    return flops / max(decode_attn_bytes(cfg, shape, run, path), 1)
+
+
 def _cache_ab(cfg: ModelConfig, shape: ShapeConfig, run=None) -> Tree:
     B, S = shape.global_batch, shape.seq_len
     return abstract_cache(cfg, B, S, src_len=src_len_for(cfg, S),
@@ -199,4 +255,15 @@ def placement_report(cfg: ModelConfig, shape: ShapeConfig, run, mesh: Mesh,
     if kind != "train" and cfg.cache_layout == "paged":
         # the admission-control number: pages the scheduler must find free
         out["cache_pages"] = float(decode_page_budget(cfg, shape, run))
+    if kind == "decode" and cfg.cache_layout == "paged" and not cfg.use_mla:
+        # per-step decode bandwidth pricing: the scheduler/roofline should
+        # charge the kernel's resident-page walk, not the dense-view bound
+        # (MLA decode reads the latent cache, not the page pool — its
+        # paged walk is still open, see ROADMAP)
+        import numpy as np
+        n_dev = int(np.prod(list(mesh.shape.values())))   # AbstractMesh-safe
+        out["decode_attn_gb_step"] = decode_attn_bytes(
+            cfg, shape, run, "kernel") / n_dev / 1e9
+        out["decode_attn_gb_step_ref"] = decode_attn_bytes(
+            cfg, shape, run, "reference") / n_dev / 1e9
     return {k: round(v, 3) for k, v in out.items()}

@@ -155,14 +155,19 @@ def decode_attention_paged(
 
     This is the *reference* walk: the gather materializes the table-bounded
     (B, pps·ps, K, hd) view, so per-step transient memory is bounded by the
-    page-table length, not by what's resident.  The perf follow-up (ROADMAP)
-    is a per-page online-softmax kernel that never materializes it."""
+    page-table length, not by what's resident.  The serving hot path uses
+    ``kernels.paged_attention`` instead (Pallas flash-decode over the page
+    table, or the O(pages) ``lax.scan`` fallback); this walk stays as the
+    equivalence oracle and the benchmark baseline."""
     B = q.shape[0]
     _, K, ps, hd = k_pages.shape
     pps = page_table.shape[1]
-    pt = jnp.maximum(page_table, 0)                  # clamp: masked below
-    kb = k_pages[pt]                                 # (B, pps, K, ps, hd)
-    vb = v_pages[pt]
+    # fill-mode gather: -1 entries are out of bounds and fill with zeros —
+    # the old clamp-to-0 gathered (and paid the bandwidth of) page 0 for
+    # every unallocated entry
+    kb = jnp.take(k_pages, page_table, axis=0, mode="fill",
+                  fill_value=0)                      # (B, pps, K, ps, hd)
+    vb = jnp.take(v_pages, page_table, axis=0, mode="fill", fill_value=0)
     T = pps * ps
     kb = kb.transpose(0, 2, 1, 3, 4).reshape(B, K, T, kb.shape[-1])
     vb = vb.transpose(0, 2, 1, 3, 4).reshape(B, K, T, vb.shape[-1])
@@ -195,6 +200,7 @@ def gqa_attention(
     cross_kv: Optional[jax.Array] = None,   # encoder output for cross-attn
     is_cross: bool = False,
     causal: bool = True,
+    lengths: Optional[jax.Array] = None,    # ragged prefill: (B,) true lens
 ) -> Tuple[jax.Array, Optional[Cache]]:
     B = x.shape[0]
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -252,7 +258,18 @@ def gqa_attention(
                     q_block=ctx.attn_q_block, kv_block=ctx.attn_kv_block)
             if cache is not None:       # prefill: write the kv cache
                 if "k_pages" in cache:
-                    new_cache = _write_prefill_paged(cache, k, v)
+                    new_cache = _write_prefill_paged(cache, k, v,
+                                                     lengths=lengths)
+                elif lengths is not None:
+                    if not window:
+                        raise NotImplementedError(
+                            "ragged prefill needs the paged layout for "
+                            "global layers (dense caches are lockstep-only)")
+                    # works for the true ring (W == window) and the short
+                    # dense-local buffer (W == S_max < window) alike: the
+                    # mod-W gather degenerates to the identity there
+                    new_cache = _write_prefill_ring_ragged(
+                        cache, k, v, lengths, cache["k"].shape[2])
                 else:
                     new_cache = _write_full_kv(cache, k, v, pos, window)
     else:  # decode, self-attention
@@ -266,10 +283,23 @@ def gqa_attention(
                 assert not window, \
                     "paged layout covers global layers; local layers ring"
                 new_cache = _update_decode_kv_paged(cache, k, v, pos)
-                out = decode_attention_paged(
-                    q, new_cache["k_pages"], new_cache["v_pages"],
-                    new_cache["page_table"], pos, scale=scale,
-                    logit_cap=cfg.attn_logit_softcap)
+                kp, vp = new_cache["k_pages"], new_cache["v_pages"]
+                pt = new_cache["page_table"]
+                posb = jnp.broadcast_to(
+                    jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,)),
+                    (B,))
+                if ctx.use_pallas:
+                    from repro.kernels.ops import paged_decode_bhd
+                    out = paged_decode_bhd(
+                        q, kp, vp, pt, posb, scale=scale,
+                        logit_cap=cfg.attn_logit_softcap)
+                else:
+                    # O(pages) lax.scan walk — same contract as the kernel
+                    from repro.kernels.paged_attention import paged_decode_jnp
+                    out = paged_decode_jnp(
+                        q.reshape(B, K, H // K, hd), kp, vp, pt, posb,
+                        scale=scale,
+                        logit_cap=cfg.attn_logit_softcap).reshape(B, 1, H, hd)
             else:
                 new_cache, k_all, v_all, pos_all = _update_decode_kv(
                     cache, k, v, pos, window)
@@ -318,22 +348,68 @@ def _write_full_kv(cache: Cache, k, v, pos, window: int) -> Cache:
     return {"k": ck, "v": cv, "pos": cp}
 
 
-def _write_prefill_paged(cache: Cache, k, v) -> Cache:
+def _write_prefill_paged(cache: Cache, k, v,
+                         lengths: Optional[jax.Array] = None) -> Cache:
     """Prefill into the paged layout: walk logical pages 0..ceil(S0/ps)-1 of
     each sequence's page table and write the K/V chunks into the pool.
     ``k, v`` arrive as (B, S0, K, hd), rotated; prefill always starts at
-    position 0, so the page loop is static."""
+    position 0, so the page loop is static.
+
+    ``lengths`` (ragged prefill) masks the walk per row: row ``b`` writes
+    only pages holding tokens ``< lengths[b]`` — rows with length 0 (slots
+    mid-decode in a continuous batch) touch nothing.  Unallocated entries
+    scatter out of bounds and are dropped (the old clamp wrote rows whose
+    table was shorter than the padded batch onto physical page 0)."""
     kp, vp, pt = cache["k_pages"], cache["v_pages"], cache["page_table"]
     ps = kp.shape[2]
     S0 = k.shape[1]
     k = k.transpose(0, 2, 1, 3)      # (B, K, S0, hd)
     v = v.transpose(0, 2, 1, 3)
+    oob = jnp.int32(kp.shape[0])     # one past the pool: mode="drop" target
     for i in range((S0 + ps - 1) // ps):
         lo, hi = i * ps, min((i + 1) * ps, S0)
-        phys = jnp.maximum(pt[:, i], 0)              # (B,) physical pages
-        kp = kp.at[phys, :, :hi - lo].set(k[:, :, lo:hi].astype(kp.dtype))
-        vp = vp.at[phys, :, :hi - lo].set(v[:, :, lo:hi].astype(vp.dtype))
+        write = pt[:, i] >= 0
+        if lengths is not None:
+            write = write & (lo < lengths)
+        phys = jnp.where(write, pt[:, i], oob)       # (B,) physical pages
+        kp = kp.at[phys, :, :hi - lo].set(k[:, :, lo:hi].astype(kp.dtype),
+                                          mode="drop")
+        vp = vp.at[phys, :, :hi - lo].set(v[:, :, lo:hi].astype(vp.dtype),
+                                          mode="drop")
     return {"k_pages": kp, "v_pages": vp, "page_table": pt}
+
+
+def _write_prefill_ring_ragged(cache: Cache, k, v, lengths: jax.Array,
+                               window: int) -> Cache:
+    """Ragged prefill into a ring buffer: row ``b`` keeps the last
+    ``min(window, lengths[b])`` of its *own* tokens (a lockstep tail slice
+    would keep the tail of the padded batch, dropping short rows' real
+    tokens whenever the padding exceeds the window).
+
+    Gather formulation: for ring slot ``s``, the surviving token is the
+    largest position ``t < lengths[b]`` with ``t ≡ s (mod window)`` — a
+    per-row ``take_along_axis``, so indices are unique by construction.
+    Slots with no surviving token (short rows) keep their previous
+    contents and stay masked via the recorded ``pos`` map."""
+    S0 = k.shape[1]
+    W = cache["k"].shape[2]
+    assert W == window, (W, window)
+    k = k.transpose(0, 2, 1, 3)      # (B, K, S0, hd)
+    v = v.transpose(0, 2, 1, 3)
+    s = jnp.arange(W, dtype=jnp.int32)
+    lm1 = lengths.astype(jnp.int32)[:, None] - 1               # (B, 1)
+    t = lm1 - ((lm1 - s[None, :]) % W)                         # (B, W)
+    valid = (lengths[:, None] > 0) & (t >= 0) & \
+        (t >= lengths[:, None] - W)
+    tc = jnp.clip(t, 0, S0 - 1)
+    kg = jnp.take_along_axis(k, tc[:, None, :, None], axis=2)  # (B, K, W, hd)
+    vg = jnp.take_along_axis(v, tc[:, None, :, None], axis=2)
+    ck = jnp.where(valid[:, None, :, None], kg.astype(cache["k"].dtype),
+                   cache["k"])
+    cv = jnp.where(valid[:, None, :, None], vg.astype(cache["v"].dtype),
+                   cache["v"])
+    cp = jnp.where(valid, t, cache["pos"])
+    return {"k": ck, "v": cv, "pos": cp}
 
 
 def _update_decode_kv(cache: Cache, k, v, pos, window: int):

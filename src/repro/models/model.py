@@ -56,6 +56,7 @@ def apply_block(
     enc_out: Optional[jax.Array] = None,
     dense_only: bool = False,
     causal: bool = True,
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Tree], jax.Array]:
     """Residual block: temporal mixer + (cross-attn) + channel mixer.
 
@@ -81,7 +82,7 @@ def apply_block(
         else:
             y, nc = gqa_attention(cfg, p["attn"], x, ctx, kind=kind,
                                   mode=amode, cache=sub, pos=pos,
-                                  causal=causal)
+                                  causal=causal, lengths=lengths)
         if new_cache is not None:
             new_cache["attn"] = nc
     elif kind == RECURRENT:
@@ -166,6 +167,7 @@ def run_stack(
     causal: bool = True,
     stack_name: str = "decoder",
     remat_policy: str = "none",
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Tree], jax.Array]:
     pat = cfg.block_pattern
     aux_total = jnp.zeros((), jnp.float32)
@@ -174,7 +176,7 @@ def run_stack(
     def run_layer(i_kind, p, h, c):
         return apply_block(cfg, i_kind, p, h, ctx, mode=mode, cache=c,
                            pos=pos, enc_out=enc_out, causal=causal,
-                           dense_only=False)
+                           dense_only=False, lengths=lengths)
 
     # ---- prefix (first-k-dense, unrolled) ---------------------------------
     if "prefix" in stack:
@@ -185,7 +187,7 @@ def run_stack(
             h, nc, aux = apply_block(cfg, kind, stack["prefix"][i], h, ctx,
                                      mode=mode, cache=c, pos=pos,
                                      enc_out=enc_out, causal=causal,
-                                     dense_only=True)
+                                     dense_only=True, lengths=lengths)
             aux_total = aux_total + aux
             sub_nc[i] = nc
         if new_cache is not None:
@@ -298,15 +300,37 @@ def forward(
     cache: Optional[Tree] = None,
     pos: Optional[jax.Array] = None, # decode: scalar position
     remat_policy: str = "none",
+    lengths: Optional[jax.Array] = None,  # ragged prefill: (B,) prompt lens
 ) -> Tuple[jax.Array, Optional[Tree], jax.Array]:
     """Returns (logits, new_cache, aux_loss).
 
     train:   logits (B, S, V) for every position
     prefill: logits (B, 1, V) for the last position + filled cache
     decode:  logits (B, 1, V) + updated cache
+
+    ``lengths`` makes prefill *ragged*: the (B, S0) token batch is padded
+    to the round's max prompt length, row ``b``'s true prompt is its first
+    ``lengths[b]`` tokens, and the returned logits are each row's *last
+    valid* position.  Causality already isolates that query from the
+    padding keys (they sit at later positions), and cache writes are
+    masked per row — length-0 rows (active continuous-batching slots not
+    being prefilled this round) leave the cache untouched.  Supported for
+    attention-only stacks (paged globals + ring locals): recurrent / RWKV
+    / MLA-latent / enc-dec states scan padding into their carries.
     """
     params = cast_params(params, ctx.dtype)
     tokens = batch["tokens"]
+    if lengths is not None:
+        if mode != "prefill":
+            raise ValueError("lengths is a prefill-only argument")
+        bad = [k for k in set(cfg.layer_kinds())
+               if k not in (GLOBAL_ATTN, LOCAL_ATTN)]
+        if bad or cfg.use_mla or cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                f"ragged prefill needs an attention-only decoder "
+                f"(got {bad or 'mla/enc-dec'}): recurrent state would "
+                f"scan the padding")
+        lengths = jnp.asarray(lengths, jnp.int32)
     enc_out = None
     # decode reuses the cross K/V cached at prefill — no encoder re-run
     if cfg.is_encoder_decoder and mode != "decode":
@@ -325,15 +349,26 @@ def forward(
         p_arr = jnp.asarray(pos, jnp.int32)
     else:
         p_arr = jnp.arange(h.shape[1], dtype=jnp.int32)
+    if lengths is not None and n_front:
+        # frontend tokens are real (per-row) prefix content: fold them into
+        # the valid length; length-0 rows stay untouched
+        lengths = jnp.where(lengths > 0, lengths + n_front, 0)
 
     h, new_cache, aux = run_stack(
         cfg, params["decoder"], h, ctx, mode=mode, cache=cache, pos=p_arr,
-        enc_out=enc_out, causal=True, remat_policy=remat_policy)
+        enc_out=enc_out, causal=True, remat_policy=remat_policy,
+        lengths=lengths)
 
     if mode == "train":
         if n_front:
             h = h[:, n_front:]
         logits = _unembed(cfg, params, h, ctx)
+    elif lengths is not None:
+        # ragged prefill: each row's last *valid* position (length-0 rows
+        # return garbage logits the caller ignores)
+        idx = jnp.maximum(lengths, 1) - 1                      # (B,)
+        hl = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+        logits = _unembed(cfg, params, hl, ctx)
     else:
         logits = _unembed(cfg, params, h[:, -1:], ctx)
     return logits, new_cache, aux

@@ -153,10 +153,15 @@ def make_train_step(
 # inactive slots carry -1 and their logits are garbage to be ignored).
 # ---------------------------------------------------------------------------
 def make_prefill_step(cfg: ModelConfig, ctx: Ctx):
-    """(params, batch, cache) -> (last_logits, filled_cache)."""
-    def prefill_step(params, batch, cache):
+    """(params, batch, cache, lengths=None) -> (last_logits, filled_cache).
+
+    ``lengths`` (B,) switches to the *ragged* prefill path: prompts padded
+    to the batch max, per-row last-valid logits, per-row masked cache
+    writes (length-0 rows untouched — see models.model.forward)."""
+    def prefill_step(params, batch, cache, lengths=None):
         logits, new_cache, _ = forward(cfg, params, batch, ctx,
-                                       mode="prefill", cache=cache)
+                                       mode="prefill", cache=cache,
+                                       lengths=lengths)
         return logits, new_cache
     return prefill_step
 

@@ -41,16 +41,19 @@ def _run_serve(cfg, ctx, params, toks):
 
 @pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma2-9b", "qwen2.5-32b"])
 def test_paged_matches_dense_decode(arch):
-    """Decode logits must be numerically equal (fp32) between the dense
-    fallback and the paged layout — gather pages + masked softmax is the
-    same math as the dense position-indexed buffer."""
+    """Decode logits must agree (fp32) between the dense fallback and the
+    paged layout.  The paged model path is the O(pages) online-softmax walk
+    (kernels.paged_attention), which reorders the reduction vs the dense
+    full softmax — so the bound is a tight fp32 tolerance rather than the
+    bitwise equality the old gather-reference permitted; op-level
+    equivalence at ~1e-6 is covered in test_paged_kernel.py."""
     cfg, ctx, params, toks = _setup(arch)
     dense, _ = _run_serve(dataclasses.replace(cfg, cache_layout="dense"),
                           ctx, params, toks)
     paged, _ = _run_serve(dataclasses.replace(cfg, cache_layout="paged"),
                           ctx, params, toks)
     err = float(jnp.abs(dense - paged).max())
-    assert err < 1e-5, (arch, err)
+    assert err < 1e-4, (arch, err)
 
 
 @pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma2-9b"])

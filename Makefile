@@ -3,9 +3,9 @@
 
 PY ?= python
 
-.PHONY: verify lint serve-smoke bench-smoke dryrun
+.PHONY: verify lint serve-smoke bench-smoke platform-serve-smoke dryrun
 
-verify: lint
+verify: lint platform-serve-smoke
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 # ruff is available in CI; locally the lint step degrades gracefully
@@ -27,6 +27,12 @@ serve-smoke:
 # Never rewrites the checked-in BENCH_serve_decode.json.
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.serve_decode --smoke
+
+# Platform-serve regression gate: the real ServingEngine payload runs a
+# tiny workload under the platform and must produce responses byte-equal
+# to the direct engine run.  Never rewrites BENCH_platform_serve.json.
+platform-serve-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.platform_serve --smoke
 
 dryrun:
 	PYTHONPATH=src $(PY) -m repro.launch.dryrun --all

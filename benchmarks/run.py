@@ -45,6 +45,15 @@ def main() -> None:
 
     print()
     print("=" * 72)
+    print("# Platform serve — real-engine payload under the platform vs "
+          "direct (wall s)")
+    print("=" * 72)
+    from benchmarks import platform_serve
+    failures = platform_serve.main(
+        ["--smoke"] if args.quick else []) or failures
+
+    print()
+    print("=" * 72)
     print("# Roofline — per (arch × shape), single-pod 16x16 "
           "(from dry-run artifacts)")
     print("=" * 72)

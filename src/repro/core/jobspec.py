@@ -83,8 +83,17 @@ class ServeSpec:
     page_budget: int = 0                      # 0 = worst case
     use_pallas: bool = False                  # paged flash-decode kernel
     ragged_prefill: Optional[bool] = None     # None = auto (attn-only archs)
+    # optimistic admission: reserve worst-case pages up to overcommit ×
+    # budget; on page exhaustion the engine evicts the youngest sequence
+    # back to the queue (1.0 = conservative, never evicts)
+    overcommit: float = 1.0
     # platform-sim knob (virtual servers)
     request_time_s: float = 0.2
+    # platform real-payload knobs: run the actual ServingEngine inside the
+    # server pods (journal + snapshots on the job volume) instead of the
+    # virtual-time loop
+    real_compute: bool = False
+    snapshot_every: int = 8                   # decode steps between snapshots
 
 
 @dataclass(frozen=True)
@@ -110,6 +119,8 @@ class DryRunSpec:
     timeout_s: int = 3600                     # per-cell (local execution)
     # platform-sim knob: virtual lower+compile time per cell
     cell_time_s: float = 2.0
+    # platform real-payload knob: lower + compile the cells for real
+    real_compute: bool = False
 
 
 def resolve_cells(dr: DryRunSpec) -> Tuple[SweepCell, ...]:
@@ -254,6 +265,12 @@ class JobSpec:
                 return "serve.requests must be >= 0 (0 = run until halted)"
             if w.request_time_s <= 0:
                 return "serve.request_time_s must be > 0"
+            if w.overcommit < 1.0:
+                return "serve.overcommit must be >= 1.0"
+            if w.snapshot_every < 1:
+                return "serve.snapshot_every must be >= 1"
+            if w.real_compute and w.requests < 1:
+                return "serve.real_compute needs a bounded request count"
         elif self.kind == "dryrun":
             if not w.sweep_all and not w.cells:
                 return "dryrun needs cells or sweep_all=True"
@@ -316,8 +333,11 @@ class FrameworkAdapter:
 
     The platform calls, in order: :meth:`validate` (at the API gateway),
     :meth:`gang` (at Guardian admission) and :meth:`workload_proc` (one
-    call per workload pod).  Subclass to plug in a new framework without
-    touching the gateway or the Guardian."""
+    call per workload pod); the workload pods call :meth:`payload` to
+    obtain the *real* compute payload — or ``None`` for the virtual-time
+    default.  LCM/Guardian never look inside any of these: dispatch is
+    payload-agnostic, so plugging in a new framework (or a real payload
+    for an existing kind) touches neither the gateway nor the Guardian."""
 
     def __init__(self, framework: str):
         self.framework = framework
@@ -331,6 +351,19 @@ class FrameworkAdapter:
     def workload_proc(self, platform, job_id: str, spec: JobSpec, idx: int):
         raise NotImplementedError
 
+    def payload(self, platform, job_id: str, spec: JobSpec):
+        """Payload-builder hook: the real compute object a workload pod
+        should drive, or ``None`` to run the virtual-time loop (the
+        default — fast tests never touch JAX).  ``real_compute`` on the
+        workload block is the virtual-vs-real switch (the pre-v2 learner
+        contract); when it is set, the base implementation returns the
+        payload registered via ``platform.register_payload`` — the
+        external-trainer seam and the test-injection point — so EVERY
+        adapter inherits registration without overriding."""
+        if not getattr(spec.workload, "real_compute", False):
+            return None
+        return platform.payloads.get(job_id)
+
 
 class ArchitectureAdapter(FrameworkAdapter):
     """Default adapter: the framework id is a registry architecture, the
@@ -340,6 +373,30 @@ class ArchitectureAdapter(FrameworkAdapter):
         if spec.kind == "serve" and spec.serve.continuous:
             if spec.serve.cache_layout == "dense":
                 return "serve.continuous requires the paged cache layout"
+        if spec.kind == "serve" and spec.serve.real_compute:
+            sv = spec.serve
+            if sv.cache_layout == "dense":
+                return "serve.real_compute runs the paged serving engine"
+            from repro.configs import get_config
+            from repro.configs.base import GLOBAL_ATTN, LOCAL_ATTN
+            cfg = get_config(spec.framework)
+            if cfg.use_mla or cfg.is_encoder_decoder:
+                return ("serve.real_compute needs per-sequence decode "
+                        "positions; MLA / enc-dec caches are lockstep-only")
+            # reject engine-constructor failures HERE, at the gateway —
+            # inside a pod they would burn the job's whole restart budget
+            if sv.reduced:
+                cfg = cfg.reduced()
+            ps = sv.page_size or cfg.page_size
+            pps = -(-(sv.prompt_len + sv.gen) // ps)
+            if sv.page_budget and sv.page_budget < pps:
+                return (f"serve.page_budget {sv.page_budget} cannot hold "
+                        f"one request ({pps} pages)")
+            attn_only = set(cfg.layer_kinds()) <= {GLOBAL_ATTN, LOCAL_ATTN}
+            if sv.ragged_prefill and not attn_only:
+                return ("serve.ragged_prefill needs an attention-only "
+                        "decoder; recurrent/RWKV state would scan the "
+                        "padding")
         return None
 
     def workload_proc(self, platform, job_id: str, spec: JobSpec, idx: int):
@@ -350,6 +407,25 @@ class ArchitectureAdapter(FrameworkAdapter):
         if spec.kind == "serve":
             return make_server_proc(platform, job_id, spec, idx)
         return make_dryrun_proc(platform, job_id, spec, idx)
+
+    def payload(self, platform, job_id: str, spec: JobSpec):
+        """Real payloads, by kind: an explicitly registered payload wins
+        (base behavior); serve and dryrun kinds otherwise build their
+        stock real payloads when the spec asks for real compute.  Train
+        has no default builder — real training state (step fn, data)
+        must be registered."""
+        registered = super().payload(platform, job_id, spec)
+        if registered is not None:
+            return registered
+        if not getattr(spec.workload, "real_compute", False):
+            return None
+        if spec.kind == "serve":
+            from repro.launch.engine import RealServePayload
+            return RealServePayload(spec)
+        if spec.kind == "dryrun":
+            from repro.launch.engine import RealDryRunPayload
+            return RealDryRunPayload(spec)
+        return None
 
 
 class FrameworkRegistry:

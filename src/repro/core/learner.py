@@ -68,7 +68,10 @@ def make_learner_proc(platform, job_id: str, spec: JobSpec, idx: int):
         if vol is None:
             raise RuntimeError("volume not mounted")
         ckpt = CheckpointManager(platform.objectstore, job_id)
-        payload = platform.payloads.get(job_id) if spec.real_compute else None
+        # payload-agnostic dispatch: the framework adapter decides whether
+        # this pod drives real compute or stays virtual-time
+        payload = platform.frameworks.get(spec.framework).payload(
+            platform, job_id, spec)
 
         # -- wait for load-data helper ------------------------------------
         while not vol.read("data_ready"):

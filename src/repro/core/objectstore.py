@@ -33,9 +33,26 @@ class ObjectStore:
         self.bytes_written += len(data)
         return digest
 
+    def append(self, path: str, data: bytes) -> None:
+        """Append to a blob without rewriting it (the log-shipping path).
+        Costs O(len(data)) per call — the blob grows in place (bytearray),
+        so shipping n log lines writes O(total) bytes, not O(n²) as the
+        old read-modify-write ``get`` + ``put`` per line did."""
+        self._check()
+        buf = self._blobs.get(path)
+        if not isinstance(buf, bytearray):
+            buf = bytearray(buf if buf is not None else b"")
+            self._blobs[path] = buf
+        buf += data
+        self.put_count += 1
+        self.bytes_written += len(data)
+
     def get(self, path: str) -> bytes:
         self._check()
-        return self._blobs[path]
+        raw = self._blobs[path]
+        # only append()-grown blobs are bytearray-backed; don't tax every
+        # read (checkpoint shards are large) with a defensive copy
+        return bytes(raw) if isinstance(raw, bytearray) else raw
 
     def exists(self, path: str) -> bool:
         return path in self._blobs

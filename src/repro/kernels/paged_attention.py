@@ -24,6 +24,14 @@ the gathered view.
   ``use_pallas`` (the scan carries one ``(B, K, ps, hd)`` page gather per
   step instead of the whole table).
 
+When the query group G is small (GQA with few q heads per kv head), the
+per-kv-head grid issues a starving ``(G, hd) × (hd, ps)`` matmul per page;
+``grouped=True`` (auto for ``G <= 4``) switches to a ``(batch, page)`` grid
+where ALL K·G query heads hit the page in ONE MXU call — a block-diagonal
+masked ``(K·G, hd) × (hd, K·ps)`` score matmul (K× redundant compute,
+traded for MXU occupancy).  Contract and numerics match the per-kv-head
+kernel, the scan fallback, and the ``decode_attention_paged`` oracle.
+
 Masking rules (shared by both, and by the reference):
 
 * slot ``t`` of a sequence holds absolute position ``t`` — a key is live
@@ -98,6 +106,65 @@ def _decode_kernel(pt_ref, pq_ref, q_ref, k_ref, v_ref, o_ref,
                        jnp.maximum(l_s[...], 1e-37)).astype(o_ref.dtype)
 
 
+def _decode_kernel_grouped(pt_ref, pq_ref, q_ref, k_ref, v_ref, o_ref,
+                           m_s, l_s, acc_s, *,
+                           scale: float, logit_cap: float, ps: int,
+                           n_pages: int, K: int, G: int):
+    """Grouped variant: grid (batch, page) — ALL K·G query heads of a
+    sequence hit the page in ONE MXU call.  The (K·G, hd) × (hd, K·ps)
+    score matmul computes every q-head × kv-head block; a block-diagonal
+    mask (query head r belongs to kv head r // G, key column c to kv head
+    c // ps) keeps only the matching ones.  The K× redundant compute is a
+    win when G is small: the per-page matmul of the per-kv-head kernel is
+    a skinny (G, hd) × (hd, ps) that starves the MXU."""
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    hd = q_ref.shape[-1]
+
+    @pl.when(i == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    pq = pq_ref[b]
+    live = jnp.logical_and(pq >= 0,
+                           jnp.logical_and(i * ps <= pq, pt_ref[b, i] >= 0))
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32).reshape(K * G, hd) * scale
+        k = k_ref[0].astype(jnp.float32).reshape(K * ps, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (KG, Kps)
+        if logit_cap:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        row_head = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        col_head = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) // ps
+        t = i * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) % ps
+        mask = jnp.logical_and(row_head == col_head, t <= pq)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        # mask p explicitly: a fully-dead row would otherwise see
+        # exp(NEG_INF - NEG_INF) == 1 (NEG_INF is a finite sentinel)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + p.sum(axis=1, keepdims=True)
+        # cross-head products are exact zeros (p is masked), so the one
+        # (KG, Kps) × (Kps, hd) value matmul sums only the right block
+        acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32).reshape(K * ps, hd),
+            (((1,), (0,)), ((), ())))
+        m_s[...] = m_new
+
+    @pl.when(i == n_pages - 1)
+    def _finalize():
+        o_ref[0] = (acc_s[...] /
+                    jnp.maximum(l_s[...], 1e-37)
+                    ).reshape(K, G, hd).astype(o_ref.dtype)
+
+
 def _page_block(b, i, pt_ref, pq_ref, ps: int):
     """Physical page for grid step (b, ·, i).  Dead tail pages (beyond the
     last live page) re-map to the last live page: the block index repeats
@@ -125,10 +192,48 @@ def paged_decode_attention(
     scale: float,
     logit_cap: float = 0.0,
     interpret: bool = False,
+    grouped: "bool | None" = None,
 ) -> jax.Array:
     B, K, G, hd = q.shape
     ps = k_pages.shape[2]
     pps = page_table.shape[1]
+
+    # small query groups starve the MXU on the per-kv-head grid: batch all
+    # K·G q heads into one call per page instead (see _decode_kernel_grouped)
+    if grouped is None:
+        grouped = G <= 4
+    if grouped:
+        kernel = functools.partial(
+            _decode_kernel_grouped, scale=scale, logit_cap=logit_cap,
+            ps=ps, n_pages=pps, K=K, G=G)
+        def kv_map_g(b, i, pt, pq):
+            return (_page_block(b, i, pt, pq, ps), 0, 0, 0)
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, pps),
+            in_specs=[
+                pl.BlockSpec((1, K, G, hd), lambda b, i, pt, pq: (b, 0, 0, 0)),
+                pl.BlockSpec((1, K, ps, hd), kv_map_g),
+                pl.BlockSpec((1, K, ps, hd), kv_map_g),
+            ],
+            out_specs=pl.BlockSpec((1, K, G, hd),
+                                   lambda b, i, pt, pq: (b, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((K * G, 1), jnp.float32),
+                pltpu.VMEM((K * G, 1), jnp.float32),
+                pltpu.VMEM((K * G, hd), jnp.float32),
+            ],
+        )
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+            compiler_params=_CompilerParams(
+                dimension_semantics=("parallel", "arbitrary")),
+            interpret=interpret,
+        )(page_table.astype(jnp.int32), pos_q.astype(jnp.int32), q,
+          k_pages, v_pages)
 
     kernel = functools.partial(
         _decode_kernel, scale=scale, logit_cap=logit_cap, ps=ps, n_pages=pps)

@@ -1,0 +1,596 @@
+"""Resumable continuous-batching serving engine + the real-payload seam.
+
+``launch/executor.py:run_continuous`` used to be a ~170-line monolith whose
+entire state (page pool, slot table, host page table, queue cursor) was
+function-locals — unrecoverable, unpreemptible, unreachable from a platform
+job.  :class:`ServingEngine` is that loop turned into an explicit state
+machine:
+
+* **admit** — one admission round: FIFO requests from the queue into free
+  decode slots, gated by a per-shard *worst-case page reservation* scaled
+  by ``ServeSpec.overcommit`` (1.0 = the old conservative admission;
+  > 1.0 = optimistic admission with preemption).  Pages are allocated
+  lazily (prompt pages at admission, one page at a time as decode grows),
+  so overcommitted admission can actually run out — see evict.
+* **step** — one batched decode step over every active slot; grows each
+  sequence's page list on demand first.  On page exhaustion the engine
+  **evicts the youngest sequence in the starving shard** back to the front
+  of the queue (requeue-on-eviction): its pages are freed, its partial
+  generation is discarded, and re-admission re-prefills from the prompt.
+  Greedy decode is deterministic, so the re-generated response is
+  identical — no request is ever lost or answered differently.  The
+  oldest sequence in a shard is never evicted, so it always completes:
+  admission is reservation-bounded and the queue drains FIFO — no
+  deadlock, no livelock.
+* **finish** — frees pages, logs the completed response (exactly-once by
+  request id), releases the reservation.
+* **snapshot / restore** — the whole engine state (pool free lists, slot
+  records, host page table, queue, responses, the append-only
+  :attr:`journal` of admissions/evictions/completions, KV-cache arrays
+  pulled to host) as one plain-Python structure.  ``restore`` on a fresh
+  engine reproduces the exact device state, so a killed-and-restarted
+  server continues **byte-identically** with the uninterrupted run.  A
+  platform pod persists snapshots to the job volume, journals request
+  *claims* there separately, and replays the claim suffix after
+  ``restore`` to recover requests claimed after the last snapshot (see
+  ``core/server.py``).
+
+:class:`RealServePayload` / :class:`RealDryRunPayload` are the builders the
+``FrameworkAdapter.payload`` hook returns so platform serve jobs run this
+engine (and dryrun jobs real compile cells) inside their workload pods,
+under the unchanged Guardian/LCM dependability machinery.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.jobspec import JobSpec, ServeSpec
+
+
+class PagePool:
+    """Host-side physical-page allocator for the paged KV cache.
+
+    Manages page ids ``0 .. n_pages-1``.  ``n_shards > 1`` partitions the
+    id space into contiguous per-shard free lists.  The pool's pages dim
+    shards contiguously over the data axis (``cache_pages`` rule), so
+    allocating a sequence's pages from its own data shard's range keeps
+    every decode gather/scatter data-shard-local — the runtime half of the
+    locality contract whose spec half is
+    ``dist.sharding.check_cache_locality``.
+    """
+
+    def __init__(self, n_pages: int, n_shards: int = 1):
+        assert n_shards >= 1 and n_pages % n_shards == 0, (n_pages, n_shards)
+        self.n_pages = n_pages
+        self.n_shards = n_shards
+        per = n_pages // n_shards
+        self.free_lists: List[List[int]] = [
+            list(range(s * per, (s + 1) * per)) for s in range(n_shards)]
+        self.high_water = 0
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - sum(len(f) for f in self.free_lists)
+
+    def alloc(self, n: int, shard: int = 0) -> Optional[List[int]]:
+        fl = self.free_lists[shard]
+        if n > len(fl):
+            return None
+        pages, self.free_lists[shard] = fl[:n], fl[n:]
+        self.high_water = max(self.high_water, self.in_use)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        per = self.n_pages // self.n_shards
+        for p in pages:
+            self.free_lists[min(p // per, self.n_shards - 1)].append(p)
+
+
+def _set_page_tables(cache, host_table: np.ndarray):
+    """Broadcast the (B, pps) host page table into every per-layer
+    ``page_table`` leaf (layers index their own pools identically)."""
+    import jax
+    import jax.numpy as jnp
+
+    table = jnp.asarray(host_table, jnp.int32)
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in leaves:
+        if getattr(path[-1], "key", None) == "page_table":
+            out.append(jnp.broadcast_to(table, leaf.shape).astype(jnp.int32))
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Requests and per-slot records
+# ---------------------------------------------------------------------------
+@dataclass
+class Request:
+    """One serving request: a prompt and a greedy generation budget."""
+
+    req: int                       # stable id (claim index on the platform)
+    tokens: np.ndarray             # (L,) prompt token ids
+    gen_len: int                   # tokens to generate (incl. prefill token)
+
+
+@dataclass
+class SeqRecord:
+    """Everything the engine knows about one active decode slot."""
+
+    request: Request
+    pages: List[int]               # physical pages held, table order
+    shard: int
+    need_worst: int                # worst-case pages (reservation unit)
+    remaining: int                 # tokens still to generate
+    out_tokens: List[int] = field(default_factory=list)
+    admit_seq: int = 0             # admission order; larger = younger
+
+
+class ServingEngine:
+    """Continuous batching over the paged cache as a resumable state
+    machine.  See the module docstring for the state-machine contract."""
+
+    def __init__(self, cfg, ctx, params, sv: ServeSpec):
+        import jax.numpy as jnp  # noqa: F401  (fail fast without jax)
+
+        from repro.configs.base import GLOBAL_ATTN, LOCAL_ATTN
+        from repro.models.model import init_cache, num_pages
+        from repro.train.steps import make_serve_steps
+
+        # ValueError, not SystemExit: inside a platform pod these must fail
+        # THIS pod/job (sim catches Exception), never the whole simulator;
+        # run_continuous maps them to SystemExit for the CLI
+        if cfg.cache_layout != "paged":
+            raise ValueError("--continuous requires --layout paged")
+        if cfg.use_mla or cfg.is_encoder_decoder:
+            raise ValueError(
+                "--continuous needs per-sequence decode positions; "
+                "MLA / enc-dec caches are lockstep-only")
+        attn_only = set(cfg.layer_kinds()) <= {GLOBAL_ATTN, LOCAL_ATTN}
+        ragged = attn_only if sv.ragged_prefill is None else sv.ragged_prefill
+        if ragged and not attn_only:
+            raise ValueError(
+                "--ragged-prefill needs an attention-only decoder; "
+                "recurrent/RWKV state would scan the padding")
+
+        B, P, G = sv.batch, sv.prompt_len, sv.gen
+        self.cfg, self.ctx, self.params, self.sv = cfg, ctx, params, sv
+        self.ragged = ragged
+        self.B = B
+        self.ps = cfg.page_size
+        self.max_len = P + G
+        self.pps = num_pages(self.max_len, self.ps)
+        budget = sv.page_budget or B * self.pps
+        if budget < self.pps:
+            raise ValueError(f"--page-budget {budget} cannot hold one "
+                             f"request ({self.pps} pages)")
+        self.overcommit = sv.overcommit or 1.0
+        if self.overcommit < 1.0:
+            raise ValueError(f"--overcommit {self.overcommit} must be >= 1")
+
+        self.prefill, self.decode = make_serve_steps(cfg, ctx)
+        self.cache = init_cache(cfg, B, self.max_len, layout="paged",
+                                page_budget=budget, paged_tables="empty")
+
+        # page→data-shard locality (see PagePool); one shard when the budget
+        # doesn't split evenly or a shard couldn't hold a full request
+        n_shards = dict(zip(ctx.mesh.axis_names, ctx.mesh.axis_sizes)).get(
+            "data", 1) if ctx.mesh is not None else 1
+        if budget % n_shards or B % n_shards \
+                or budget // n_shards < self.pps:
+            n_shards = 1
+        self.pool = PagePool(budget, n_shards)
+        self.per_shard = budget // n_shards
+        self.reserved = [0] * n_shards          # worst-case pages admitted
+        self.host_table = np.full((B, self.pps), -1, np.int32)
+
+        self.slots: List[Optional[SeqRecord]] = [None] * B
+        self.toks = np.zeros((B, 1), np.int64)
+        self.pos = np.full((B,), -1, np.int64)
+        self.queue: Deque[Request] = deque()
+        self.responses: Dict[int, List[int]] = {}
+        self.journal: List[dict] = []
+
+        # stats
+        self.decode_steps = 0
+        self.generated = 0
+        self.stalled_admissions = 0
+        self.evictions = 0
+        self._admit_seq = 0
+
+    # -- queue -------------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        """Enqueue a request (FIFO).  Rejects requests whose worst-case
+        page need exceeds a shard's capacity — admitting one would
+        deadlock the pool."""
+        from repro.models.model import num_pages
+        need = num_pages(len(request.tokens) + request.gen_len, self.ps)
+        if need > self.per_shard:
+            raise ValueError(
+                f"request {request.req} needs {need} pages worst-case; "
+                f"a shard holds {self.per_shard}")
+        self.queue.append(request)
+
+    def free_slot_count(self) -> int:
+        return sum(1 for s in self.slots if s is None)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(s is None for s in self.slots)
+
+    def active_records(self) -> List[SeqRecord]:
+        return [s for s in self.slots if s is not None]
+
+    def _shard_of(self, b: int) -> int:
+        return b * self.pool.n_shards // self.B
+
+    # -- admission ---------------------------------------------------------
+    def admit(self) -> List[int]:
+        """One admission round: FIFO queue head into free slots while the
+        shard reservation (scaled by ``overcommit``) and the prompt's
+        physical pages are available.  Runs ONE batched ragged prefill for
+        the whole round on attention-only stacks (per-slot view prefill
+        otherwise).  Returns the admitted request ids."""
+        import jax.numpy as jnp
+
+        from repro.models.model import (
+            cache_slot_merge, cache_slot_view, num_pages)
+
+        admitted: List[tuple] = []               # (slot, request)
+        for b in range(self.B):
+            if self.slots[b] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            shard = self._shard_of(b)
+            L = len(req.tokens)
+            need_worst = num_pages(L + req.gen_len, self.ps)
+            cap = int(self.overcommit * self.per_shard)
+            prompt_pages = num_pages(L, self.ps)
+            if self.reserved[shard] + need_worst > cap:
+                self.stalled_admissions += 1
+                break                            # FIFO: no out-of-order admit
+            pages = self.pool.alloc(prompt_pages, shard)
+            if pages is None:
+                self.stalled_admissions += 1
+                break
+            self.queue.popleft()
+            self.reserved[shard] += need_worst
+            self.host_table[b, :prompt_pages] = pages
+            self.host_table[b, prompt_pages:] = -1
+            self._admit_seq += 1
+            self.slots[b] = SeqRecord(
+                request=req, pages=pages, shard=shard,
+                need_worst=need_worst, remaining=req.gen_len,
+                admit_seq=self._admit_seq)
+            admitted.append((b, req))
+
+        if not admitted:
+            return []
+        self.cache = _set_page_tables(self.cache, self.host_table)
+
+        if self.ragged:
+            # one batched ragged prefill for the whole round: pad to the
+            # round max, bucketed to a page multiple (bounds recompiles)
+            round_max = max(len(r.tokens) for _, r in admitted)
+            S0 = -(-round_max // self.ps) * self.ps
+            toks_in = np.zeros((self.B, S0), admitted[0][1].tokens.dtype)
+            lens = np.zeros((self.B,), np.int32)
+            for b, r in admitted:
+                toks_in[b, :len(r.tokens)] = r.tokens
+                lens[b] = len(r.tokens)
+            logits, self.cache = self.prefill(
+                self.params, {"tokens": jnp.asarray(toks_in)}, self.cache,
+                jnp.asarray(lens))
+            nxt_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+
+        out: List[int] = []
+        for b, r in admitted:
+            if not self.ragged:
+                view = cache_slot_view(self.cache, self.B, b)
+                logits, view = self.prefill(
+                    self.params, {"tokens": jnp.asarray(r.tokens[None])},
+                    view)
+                self.cache = cache_slot_merge(self.cache, view, self.B, b)
+                tok = int(jnp.argmax(logits[0, -1]))
+            else:
+                tok = int(nxt_tok[b])
+            rec = self.slots[b]
+            rec.out_tokens.append(tok)
+            rec.remaining -= 1
+            self.toks[b, 0] = tok
+            self.pos[b] = len(r.tokens)
+            self.generated += 1
+            self.journal.append({"ev": "admit", "req": r.req, "slot": b})
+            out.append(r.req)
+            if rec.remaining <= 0:
+                self.finish(b)                   # gen_len == 1: prefill was it
+        return out
+
+    # -- eviction (preemption / requeue path) --------------------------------
+    def evict(self, b: int) -> int:
+        """Preempt slot ``b`` back to the FRONT of the queue: free its
+        pages, release its reservation, discard its partial generation
+        (re-admission re-prefills the prompt; greedy decode regenerates
+        the identical response).  Crash recovery and preemption share this
+        one path.  Returns the evicted request id."""
+        rec = self.slots[b]
+        assert rec is not None, f"evict of empty slot {b}"
+        self.pool.free(rec.pages)
+        self.reserved[rec.shard] -= rec.need_worst
+        self.host_table[b, :] = -1
+        self.cache = _set_page_tables(self.cache, self.host_table)
+        self.slots[b] = None
+        self.pos[b] = -1
+        self.toks[b, 0] = 0
+        self.queue.appendleft(rec.request)
+        self.evictions += 1
+        self.journal.append({"ev": "evict", "req": rec.request.req,
+                             "slot": b})
+        return rec.request.req
+
+    def _youngest_in_shard(self, shard: int) -> Optional[int]:
+        best, best_seq = None, -1
+        for b, rec in enumerate(self.slots):
+            if rec is not None and rec.shard == shard \
+                    and rec.admit_seq > best_seq:
+                best, best_seq = b, rec.admit_seq
+        return best
+
+    def _ensure_pages(self) -> None:
+        """Grow every active sequence's page list to cover its next decode
+        write.  On exhaustion, evict the youngest sequence in the starving
+        shard (possibly the needy one itself) until the allocation
+        succeeds — the shard's oldest sequence is never evicted, so it
+        always completes (no deadlock)."""
+        dirty = False
+        for b in range(self.B):
+            rec = self.slots[b]
+            if rec is None:
+                continue
+            needed = int(self.pos[b]) // self.ps + 1
+            while rec is not None and len(rec.pages) < needed:
+                got = self.pool.alloc(1, rec.shard)
+                if got is not None:
+                    self.host_table[b, len(rec.pages)] = got[0]
+                    rec.pages.extend(got)
+                    dirty = True
+                    continue
+                victim = self._youngest_in_shard(rec.shard)
+                assert victim is not None, \
+                    "page exhaustion with no active sequence to evict"
+                self.evict(victim)
+                dirty = False  # evict() already pushed the table
+                if victim == b:
+                    rec = None                   # the needy one was youngest
+        if dirty:
+            self.cache = _set_page_tables(self.cache, self.host_table)
+
+    # -- decode ------------------------------------------------------------
+    def step(self) -> List[int]:
+        """One batched decode step over every active slot (inactive rows
+        carry pos = -1 and are masked inside the kernel).  Returns the
+        request ids finished by this step."""
+        import jax.numpy as jnp
+
+        if all(s is None for s in self.slots):
+            return []
+        self._ensure_pages()
+        if all(s is None for s in self.slots):
+            return []                            # everything got evicted
+        logits, self.cache = self.decode(
+            self.params, {"tokens": jnp.asarray(self.toks)}, self.cache,
+            jnp.asarray(self.pos, jnp.int32))
+        self.decode_steps += 1
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        finished: List[int] = []
+        for b in range(self.B):
+            rec = self.slots[b]
+            if rec is None:
+                continue
+            tok = int(nxt[b])
+            self.toks[b, 0] = tok
+            self.pos[b] += 1
+            rec.out_tokens.append(tok)
+            self.generated += 1
+            rec.remaining -= 1
+            if rec.remaining <= 0:
+                finished.append(rec.request.req)
+                self.finish(b)
+        return finished
+
+    def finish(self, b: int) -> None:
+        """Complete slot ``b``: free pages, release the reservation, log
+        the response (exactly-once by request id — a deterministic
+        re-execution after restore rewrites identical bytes)."""
+        rec = self.slots[b]
+        assert rec is not None, f"finish of empty slot {b}"
+        self.pool.free(rec.pages)
+        self.reserved[rec.shard] -= rec.need_worst
+        self.host_table[b, :] = -1
+        self.cache = _set_page_tables(self.cache, self.host_table)
+        prev = self.responses.get(rec.request.req)
+        assert prev is None or prev == rec.out_tokens, \
+            (rec.request.req, prev, rec.out_tokens)
+        self.responses[rec.request.req] = list(rec.out_tokens)
+        self.journal.append({"ev": "finish", "req": rec.request.req,
+                             "tokens": list(rec.out_tokens)})
+        self.slots[b] = None
+        self.pos[b] = -1
+        self.toks[b, 0] = 0
+
+    # -- snapshot / restore --------------------------------------------------
+    def snapshot(self) -> dict:
+        """The complete engine state as plain host data.  ``restore`` of
+        this structure on a fresh engine (same cfg/params) reproduces the
+        device state exactly — continuation is byte-identical."""
+        import jax
+
+        def rec_doc(rec: Optional[SeqRecord]):
+            if rec is None:
+                return None
+            return {"req": rec.request.req,
+                    "tokens": np.asarray(rec.request.tokens).copy(),
+                    "gen_len": rec.request.gen_len,
+                    "pages": list(rec.pages), "shard": rec.shard,
+                    "need_worst": rec.need_worst,
+                    "remaining": rec.remaining,
+                    "out_tokens": list(rec.out_tokens),
+                    "admit_seq": rec.admit_seq}
+
+        return {
+            "queue": [(r.req, np.asarray(r.tokens).copy(), r.gen_len)
+                      for r in self.queue],
+            "slots": [rec_doc(s) for s in self.slots],
+            "host_table": self.host_table.copy(),
+            "free_lists": [list(f) for f in self.pool.free_lists],
+            "high_water": self.pool.high_water,
+            "reserved": list(self.reserved),
+            "toks": self.toks.copy(),
+            "pos": self.pos.copy(),
+            "responses": {r: list(t) for r, t in self.responses.items()},
+            "journal": [dict(e) for e in self.journal],
+            "stats": {"decode_steps": self.decode_steps,
+                      "generated": self.generated,
+                      "stalled_admissions": self.stalled_admissions,
+                      "evictions": self.evictions,
+                      "admit_seq": self._admit_seq},
+            "journal_len": len(self.journal),
+            "cache": jax.device_get(self.cache),
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Load a :meth:`snapshot` into this (freshly built) engine."""
+        import jax
+        import jax.numpy as jnp
+
+        self.queue = deque(Request(req=r, tokens=np.asarray(t),
+                                   gen_len=g)
+                           for r, t, g in snap["queue"])
+        self.slots = []
+        for doc in snap["slots"]:
+            if doc is None:
+                self.slots.append(None)
+                continue
+            self.slots.append(SeqRecord(
+                request=Request(req=doc["req"],
+                                tokens=np.asarray(doc["tokens"]),
+                                gen_len=doc["gen_len"]),
+                pages=list(doc["pages"]), shard=doc["shard"],
+                need_worst=doc["need_worst"], remaining=doc["remaining"],
+                out_tokens=list(doc["out_tokens"]),
+                admit_seq=doc["admit_seq"]))
+        self.host_table = np.asarray(snap["host_table"]).copy()
+        self.pool.free_lists = [list(f) for f in snap["free_lists"]]
+        self.pool.high_water = snap["high_water"]
+        self.reserved = list(snap["reserved"])
+        self.toks = np.asarray(snap["toks"]).copy()
+        self.pos = np.asarray(snap["pos"]).copy()
+        self.responses = {r: list(t) for r, t in snap["responses"].items()}
+        self.journal = [dict(e) for e in snap["journal"]]
+        st = snap["stats"]
+        self.decode_steps = st["decode_steps"]
+        self.generated = st["generated"]
+        self.stalled_admissions = st["stalled_admissions"]
+        self.evictions = st["evictions"]
+        self._admit_seq = st["admit_seq"]
+        self.cache = jax.tree.map(jnp.asarray, snap["cache"])
+
+    # -- drive to completion --------------------------------------------------
+    def run(self) -> None:
+        """Drain the queue: alternate admission rounds and decode steps
+        until nothing is queued or active (the old run_continuous loop)."""
+        while not self.idle:
+            self.admit()
+            if all(s is None for s in self.slots):
+                if not self.queue:
+                    break                        # drained at prefill
+                continue                         # re-admit (gen_len == 1 round)
+            self.step()
+
+
+# ---------------------------------------------------------------------------
+# Workload synthesis (shared by the CLI and every platform replica)
+# ---------------------------------------------------------------------------
+def synthesize_requests(cfg, sv: ServeSpec, seed: int,
+                        ragged: bool) -> List[Request]:
+    """The deterministic request workload for a ServeSpec: every replica of
+    a platform gang derives the identical list, so a claim index fully
+    identifies a request (claim-then-serve exactly-once)."""
+    import jax
+
+    rng = np.random.default_rng(seed)
+    n_req, P, G = sv.requests, sv.prompt_len, sv.gen
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(1), (n_req, P), 0, cfg.vocab_size))
+    gen_lens = rng.integers(max(G // 2, 1), G + 1, size=n_req)
+    # ragged workload: per-request prompt lengths in [P/2, P]; the lockstep
+    # fallback serves every prompt at full length P
+    prompt_lens = rng.integers(max(P // 2, 1), P + 1, size=n_req) if ragged \
+        else np.full(n_req, P, np.int64)
+    return [Request(req=r, tokens=prompts[r, :int(prompt_lens[r])].copy(),
+                    gen_len=int(gen_lens[r])) for r in range(n_req)]
+
+
+# ---------------------------------------------------------------------------
+# Real payloads for platform workload pods (FrameworkAdapter.payload hook)
+# ---------------------------------------------------------------------------
+class RealServePayload:
+    """Builds the real serving engine for one platform serve job.  Each pod
+    incarnation calls :meth:`build` fresh — parameters are re-initialized
+    from the job seed (pure function), so a restarted container holds the
+    exact model the dead one did, and ``ServingEngine.restore`` + journal
+    replay recover the serving state."""
+
+    def __init__(self, spec: JobSpec):
+        self.spec = spec
+
+    def build(self):
+        """Returns ``(engine, requests)`` for this job's ServeSpec."""
+        import dataclasses
+
+        import jax
+        import jax.numpy as jnp
+
+        from repro.configs import get_config
+        from repro.launch.executor import _make_mesh
+        from repro.models.layers import Ctx
+        from repro.models.params import init_params
+
+        spec, sv = self.spec, self.spec.serve
+        cfg = get_config(spec.framework)
+        if sv.reduced:
+            cfg = cfg.reduced()
+        overrides = {"cache_layout": sv.cache_layout or "paged"}
+        if sv.page_size:
+            overrides["page_size"] = sv.page_size
+        cfg = dataclasses.replace(cfg, **overrides)
+        ctx = Ctx(mesh=_make_mesh(sv.mesh),
+                  dtype=jnp.float32 if sv.reduced else jnp.bfloat16,
+                  use_pallas=sv.use_pallas)
+        params = init_params(cfg, jax.random.key(spec.seed))
+        engine = ServingEngine(cfg, ctx, params, sv)
+        requests = synthesize_requests(cfg, sv, spec.seed, engine.ragged)
+        return engine, requests
+
+
+class RealDryRunPayload:
+    """Real compile cells for a platform dryrun job.  ``run_cell`` lowers
+    and compiles the cell for real (``launch.dryrun.run_cell``); tests may
+    inject a cheaper cell runner via ``platform.register_payload``."""
+
+    def __init__(self, spec: JobSpec, run_cell=None):
+        self.spec = spec
+        self._run_cell = run_cell
+
+    def run_cell(self, cell) -> dict:
+        if self._run_cell is not None:
+            return self._run_cell(cell)
+        from repro.launch import dryrun
+        return dryrun.run_cell(cell.arch, cell.shape, cell.multi_pod)

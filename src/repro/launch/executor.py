@@ -7,9 +7,11 @@ parse-to-spec layers over this module: each builds a validated
 platform (``DLaaSPlatform.submit``) where the Guardian runs it under the
 full dependability machinery — one resource model, two run paths.
 
-Serving internals (the :class:`PagePool` allocator, lockstep and
-continuous-batching loops) live here; ``repro.launch.serve`` re-exports
-``PagePool`` for compatibility.
+Continuous-batching serving lives in :class:`repro.launch.engine.
+ServingEngine` (resumable admit/step/finish/snapshot/restore state
+machine); :func:`run_continuous` here is the thin CLI driver over it.
+``PagePool`` moved to ``repro.launch.engine`` and is re-exported here (and
+from ``repro.launch.serve``) for compatibility.
 """
 from __future__ import annotations
 
@@ -17,12 +19,11 @@ import dataclasses
 import subprocess
 import sys
 import time
-from typing import List, Optional
-
-import numpy as np
 
 from repro.core.jobspec import (
     FrameworkRegistry, JobSpec, ServeSpec, resolve_cells)
+from repro.launch.engine import (  # noqa: F401  (PagePool: compat re-export)
+    PagePool, ServingEngine, synthesize_requests)
 
 
 def execute(spec: JobSpec) -> int:
@@ -93,66 +94,6 @@ def _run_train(spec: JobSpec) -> int:
 # ---------------------------------------------------------------------------
 # kind = serve
 # ---------------------------------------------------------------------------
-class PagePool:
-    """Host-side physical-page allocator for the paged KV cache.
-
-    Manages page ids ``0 .. n_pages-1``.  Conservative admission: the
-    serving loop reserves a request's full worst-case page count up front,
-    so decode can never run out mid-flight (no preemption needed).
-
-    ``n_shards > 1`` partitions the id space into contiguous per-shard free
-    lists.  The pool's pages dim shards contiguously over the data axis
-    (``cache_pages`` rule), so allocating a sequence's pages from its own
-    data shard's range keeps every decode gather/scatter data-shard-local —
-    the runtime half of the locality contract whose spec half is
-    ``dist.sharding.check_cache_locality``.
-    """
-
-    def __init__(self, n_pages: int, n_shards: int = 1):
-        assert n_shards >= 1 and n_pages % n_shards == 0, (n_pages, n_shards)
-        self.n_pages = n_pages
-        self.n_shards = n_shards
-        per = n_pages // n_shards
-        self.free_lists: List[List[int]] = [
-            list(range(s * per, (s + 1) * per)) for s in range(n_shards)]
-        self.high_water = 0
-
-    @property
-    def in_use(self) -> int:
-        return self.n_pages - sum(len(f) for f in self.free_lists)
-
-    def alloc(self, n: int, shard: int = 0) -> Optional[List[int]]:
-        fl = self.free_lists[shard]
-        if n > len(fl):
-            return None
-        pages, self.free_lists[shard] = fl[:n], fl[n:]
-        self.high_water = max(self.high_water, self.in_use)
-        return pages
-
-    def free(self, pages: List[int]) -> None:
-        per = self.n_pages // self.n_shards
-        for p in pages:
-            self.free_lists[min(p // per, self.n_shards - 1)].append(p)
-
-
-def _set_page_tables(cache, host_table: np.ndarray):
-    """Broadcast the (B, pps) host page table into every per-layer
-    ``page_table`` leaf (layers index their own pools identically)."""
-    import jax
-    import jax.numpy as jnp
-
-    table = jnp.asarray(host_table, jnp.int32)
-
-    leaves, treedef = jax.tree_util.tree_flatten_with_path(cache)
-    out = []
-    for path, leaf in leaves:
-        if getattr(path[-1], "key", None) == "page_table":
-            out.append(jnp.broadcast_to(table, leaf.shape).astype(jnp.int32))
-        else:
-            out.append(leaf)
-    return jax.tree.unflatten(treedef, out)
-
-
 def run_lockstep(cfg, ctx, params, sv: ServeSpec) -> int:
     """Batched prefill + lockstep greedy decode (dense or paged layout)."""
     import jax
@@ -200,172 +141,39 @@ def run_lockstep(cfg, ctx, params, sv: ServeSpec) -> int:
 
 
 def run_continuous(cfg, ctx, params, sv: ServeSpec, seed: int = 0) -> int:
-    """Continuous batching over the paged cache: a queue of requests with
-    varying generation lengths is admitted per-request whenever the page
-    allocator can reserve the request's worst-case pages; finished requests
-    free their pages immediately, letting the next one in.
-
-    Attention-only architectures take the *ragged* prefill path: every
-    request admitted in a round is prefilled in ONE batched call padded to
-    the round's max prompt length (bucketed to a page multiple to bound
-    recompiles), with per-row ``lengths`` masking the cache writes — no
-    per-request slot-view prefill, and prompts are no longer padded to the
-    queue-wide maximum.  Recurrent / RWKV stacks keep the per-request
-    slot-view prefill (their carries would scan the padding)."""
+    """Continuous batching over the paged cache: the CLI driver over
+    :class:`repro.launch.engine.ServingEngine`.  Synthesizes the request
+    workload, drains the engine, prints the summary — all batching,
+    admission (conservative or optimistic via ``sv.overcommit``),
+    eviction/requeue and paging semantics live in the engine."""
     import jax
-    import jax.numpy as jnp
 
-    from repro.configs.base import GLOBAL_ATTN, LOCAL_ATTN
-    from repro.models.model import (
-        cache_slot_merge, cache_slot_view, init_cache, num_pages)
-    from repro.train.steps import make_serve_steps
-
-    if cfg.cache_layout != "paged":
-        raise SystemExit("--continuous requires --layout paged")
-    if cfg.use_mla or cfg.is_encoder_decoder:
-        raise SystemExit("--continuous needs per-sequence decode positions; "
-                         "MLA / enc-dec caches are lockstep-only")
-    attn_only = set(cfg.layer_kinds()) <= {GLOBAL_ATTN, LOCAL_ATTN}
-    ragged = attn_only if sv.ragged_prefill is None else sv.ragged_prefill
-    if ragged and not attn_only:
-        raise SystemExit("--ragged-prefill needs an attention-only decoder; "
-                         "recurrent/RWKV state would scan the padding")
-
-    B, P, G = sv.batch, sv.prompt_len, sv.gen
-    max_len = P + G
-    ps = cfg.page_size
-    pps = num_pages(max_len, ps)
-    budget = sv.page_budget or B * pps
-    if budget < pps:
-        raise SystemExit(f"--page-budget {budget} cannot hold one request "
-                         f"({pps} pages)")
-
-    rng = np.random.default_rng(seed)
+    try:
+        engine = ServingEngine(cfg, ctx, params, sv)
+    except ValueError as e:          # CLI contract: bad flags exit nonzero
+        raise SystemExit(str(e)) from e
     n_req = sv.requests
-    prompts = np.asarray(jax.random.randint(
-        jax.random.key(1), (n_req, P), 0, cfg.vocab_size))
-    gen_lens = rng.integers(max(G // 2, 1), G + 1, size=n_req)
-    # ragged workload: per-request prompt lengths in [P/2, P]; the lockstep
-    # fallback serves every prompt at full length P
-    prompt_lens = rng.integers(max(P // 2, 1), P + 1, size=n_req) if ragged \
-        else np.full(n_req, P, np.int64)
-
-    prefill, decode = make_serve_steps(cfg, ctx)
-    cache = init_cache(cfg, B, max_len, layout="paged", page_budget=budget,
-                       paged_tables="empty")
-    # page→data-shard locality: slot b's batch row lives on one data shard,
-    # so allocate its pages from that shard's contiguous range.  Falls back
-    # to one shard when the budget doesn't split evenly or a shard couldn't
-    # hold even a single request (which would deadlock admission).
-    n_shards = dict(zip(ctx.mesh.axis_names, ctx.mesh.axis_sizes)).get(
-        "data", 1) if ctx.mesh is not None else 1
-    if budget % n_shards or B % n_shards or budget // n_shards < pps:
-        n_shards = 1
-    pool = PagePool(budget, n_shards)
-    host_table = np.full((B, pps), -1, np.int32)
-
-    slots: List[Optional[dict]] = [None] * B
-    toks = np.zeros((B, 1), np.int64)
-    pos = np.full((B,), -1, np.int64)
-    next_req = 0
-    done: List[int] = []
-    stalled_admissions = 0
     t0 = time.time()
-    decode_steps = 0
-    generated = 0
+    for request in synthesize_requests(cfg, sv, seed, engine.ragged):
+        engine.submit(request)
+    engine.run()
 
-    def finish(b: int) -> None:
-        nonlocal cache
-        s = slots[b]
-        pool.free(s["pages"])
-        host_table[b, :] = -1
-        cache = _set_page_tables(cache, host_table)
-        done.append(s["req"])
-        slots[b] = None
-        pos[b] = -1
-        toks[b, 0] = 0
-
-    while len(done) < n_req:
-        # ---- admission: one request per free slot, if pages are available
-        admitted: List[tuple] = []           # (slot, request) this round
-        for b in range(B):
-            if slots[b] is not None or next_req >= n_req:
-                continue
-            r = next_req
-            need = num_pages(int(prompt_lens[r]) + int(gen_lens[r]), ps)
-            pages = pool.alloc(need, shard=b * n_shards // B)
-            if pages is None:
-                stalled_admissions += 1
-                break                        # FIFO: don't admit out of order
-            next_req += 1
-            host_table[b, :need] = pages
-            host_table[b, need:] = -1
-            admitted.append((b, r, pages))
-        if admitted:
-            cache = _set_page_tables(cache, host_table)
-        if admitted and ragged:
-            # one batched ragged prefill for the whole round: pad to the
-            # round max, bucketed to a page multiple (bounds recompiles)
-            round_max = max(int(prompt_lens[r]) for _, r, _ in admitted)
-            S0 = -(-round_max // ps) * ps
-            toks_in = np.zeros((B, S0), prompts.dtype)
-            lens = np.zeros((B,), np.int32)
-            for b, r, _ in admitted:
-                L = int(prompt_lens[r])
-                toks_in[b, :L] = prompts[r, :L]
-                lens[b] = L
-            logits, cache = prefill(params, {"tokens": jnp.asarray(toks_in)},
-                                    cache, jnp.asarray(lens))
-            nxt_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        for b, r, pages in admitted:
-            if not ragged:
-                view = cache_slot_view(cache, B, b)
-                logits, view = prefill(
-                    params, {"tokens": jnp.asarray(prompts[r][None])}, view)
-                cache = cache_slot_merge(cache, view, B, b)
-                toks[b, 0] = int(jnp.argmax(logits[0, -1]))
-            else:
-                toks[b, 0] = int(nxt_tok[b])
-            pos[b] = int(prompt_lens[r])
-            slots[b] = {"req": r, "remaining": int(gen_lens[r]) - 1,
-                        "pages": pages}
-            generated += 1
-            if slots[b]["remaining"] <= 0:
-                finish(b)                    # gen_len == 1: prefill was it
-
-        if all(s is None for s in slots):
-            if next_req >= n_req:
-                break                        # queue drained
-            continue                         # everything finished at prefill
-
-        # ---- one decode step over every active slot (inactive rows: -1)
-        logits, cache = decode(params, {"tokens": jnp.asarray(toks)}, cache,
-                               jnp.asarray(pos, jnp.int32))
-        decode_steps += 1
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        for b in range(B):
-            s = slots[b]
-            if s is None:
-                continue
-            toks[b, 0] = int(nxt[b])
-            pos[b] += 1
-            generated += 1
-            s["remaining"] -= 1
-            if s["remaining"] <= 0:
-                finish(b)
-
-    jax.block_until_ready(cache)
+    jax.block_until_ready(engine.cache)
     dt = time.time() - t0
-    print(f"[serve/continuous] arch={cfg.name} requests={n_req} slots={B} "
-          f"prompt<= {P} gen<= {G} page_size={ps} "
-          f"prefill={'ragged' if ragged else 'per-slot'} "
+    print(f"[serve/continuous] arch={cfg.name} requests={n_req} "
+          f"slots={engine.B} prompt<= {sv.prompt_len} gen<= {sv.gen} "
+          f"page_size={engine.ps} "
+          f"prefill={'ragged' if engine.ragged else 'per-slot'} "
           f"decode={'pallas' if ctx.use_pallas else 'jnp-scan'}")
-    print(f"  pool: {budget} pages, high-water {pool.high_water}, "
-          f"admission stalls {stalled_admissions}")
-    print(f"  completed {len(done)}/{n_req} in {decode_steps} decode steps, "
-          f"{dt*1e3:.1f} ms ({generated/max(dt,1e-9):.0f} tok/s incl. "
-          f"compile)")
-    assert len(done) == n_req, (len(done), n_req)
+    print(f"  pool: {engine.pool.n_pages} pages, high-water "
+          f"{engine.pool.high_water}, admission stalls "
+          f"{engine.stalled_admissions}, evictions {engine.evictions} "
+          f"(overcommit {engine.overcommit:g})")
+    print(f"  completed {len(engine.responses)}/{n_req} in "
+          f"{engine.decode_steps} decode steps, "
+          f"{dt*1e3:.1f} ms ({engine.generated/max(dt,1e-9):.0f} tok/s "
+          f"incl. compile)")
+    assert len(engine.responses) == n_req, (len(engine.responses), n_req)
     return 0
 
 

@@ -49,6 +49,11 @@ def parse_spec(argv=None) -> JobSpec:
     ap.add_argument("--page-budget", type=int, default=0,
                     help="physical pages in the pool (0 = worst case); "
                          "smaller budgets throttle admission")
+    ap.add_argument("--overcommit", type=float, default=1.0,
+                    help="optimistic admission factor: reserve worst-case "
+                         "pages up to overcommit × budget; page exhaustion "
+                         "evicts the youngest sequence back to the queue "
+                         "(1.0 = conservative, never evicts)")
     ap.add_argument("--use-pallas", action="store_true",
                     help="paged flash-decode Pallas kernel for decode "
                          "(interpret mode off-TPU)")
@@ -77,6 +82,7 @@ def parse_spec(argv=None) -> JobSpec:
             continuous=args.continuous,
             requests=args.requests,
             page_budget=args.page_budget,
+            overcommit=args.overcommit,
             use_pallas=args.use_pallas,
             ragged_prefill=args.ragged_prefill,
         ))

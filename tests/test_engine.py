@@ -1,0 +1,208 @@
+"""ServingEngine: snapshot/restore golden-token equivalence, the
+requeue-on-eviction path (optimistic admission), and PagePool allocator
+invariants under random alloc/free traffic (hypothesis-stub properties)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.jobspec import ServeSpec
+from repro.launch.engine import (
+    PagePool, Request, ServingEngine, synthesize_requests)
+from repro.models.layers import Ctx
+from repro.models.params import init_params
+
+
+def _build(sv: ServeSpec):
+    cfg = dataclasses.replace(get_config("qwen3-0.6b").reduced(),
+                              cache_layout="paged")
+    ctx = Ctx(dtype=jnp.float32)
+    params = init_params(cfg, jax.random.key(0))
+    return cfg, ctx, params
+
+
+def _drive(engine, snap_at=()):
+    """engine.run(), capturing a snapshot after decode step k for every
+    k in ``snap_at`` (the boundaries: post-admission, mid-flight, late)."""
+    snaps = {}
+    while not engine.idle:
+        engine.admit()
+        if 0 in snap_at and 0 not in snaps:
+            snaps[0] = engine.snapshot()         # after the first admission
+        if all(s is None for s in engine.slots):
+            if not engine.queue:
+                break
+            continue
+        engine.step()
+        k = engine.decode_steps
+        if k in snap_at and k not in snaps:
+            snaps[k] = engine.snapshot()
+    return snaps
+
+
+# ---------------------------------------------------------------------------
+# Kill-mid-stream / restore: golden-token equivalence
+# ---------------------------------------------------------------------------
+def test_snapshot_restore_golden_tokens():
+    """Run the engine to completion, snapshotting at several boundaries
+    (right after the first admission round, mid-decode, near the end).
+    A FRESH engine restored from each snapshot must finish with responses
+    byte-identical to the uninterrupted run — the recovery contract the
+    platform's killed-server scenario rests on."""
+    sv = ServeSpec(batch=2, prompt_len=16, gen=6, requests=5,
+                   page_budget=6, reduced=True)
+    cfg, ctx, params = _build(sv)
+
+    golden = ServingEngine(cfg, ctx, params, sv)
+    for r in synthesize_requests(cfg, sv, seed=0, ragged=golden.ragged):
+        golden.submit(r)
+    snaps = _drive(golden, snap_at=(0, 3, 7))
+    assert len(golden.responses) == sv.requests
+    assert set(snaps) == {0, 3, 7}, set(snaps)
+
+    for k, snap in snaps.items():
+        eng = ServingEngine(cfg, ctx, params, sv)
+        eng.restore(snap)
+        _drive(eng)
+        assert eng.responses == golden.responses, f"boundary {k}"
+        # every request's stream has exactly its generation budget
+        for r, toks in eng.responses.items():
+            assert len(toks) > 0
+
+
+def test_snapshot_is_plain_host_data():
+    """Snapshots must be device-free (they live on the job volume and are
+    restored by a different pod incarnation): numpy arrays + plain
+    Python containers only."""
+    sv = ServeSpec(batch=2, prompt_len=16, gen=4, requests=2, reduced=True)
+    cfg, ctx, params = _build(sv)
+    eng = ServingEngine(cfg, ctx, params, sv)
+    for r in synthesize_requests(cfg, sv, seed=0, ragged=eng.ragged):
+        eng.submit(r)
+    eng.admit()
+    eng.step()
+    snap = eng.snapshot()
+    for leaf in jax.tree.leaves(snap["cache"]):
+        assert isinstance(leaf, np.ndarray), type(leaf)
+    assert isinstance(snap["host_table"], np.ndarray)
+    assert snap["journal_len"] == len(eng.journal)
+
+
+# ---------------------------------------------------------------------------
+# Optimistic admission + requeue-on-eviction
+# ---------------------------------------------------------------------------
+def _two_requests(ps=8):
+    toks = np.asarray(jax.random.randint(
+        jax.random.key(1), (2, 8), 0, 503))
+    # gen 10: decode writes positions 8..16 — the 17th slot forces a third
+    # page mid-decode, which a 4-page pool cannot give both sequences
+    return [Request(req=0, tokens=toks[0], gen_len=10),
+            Request(req=1, tokens=toks[1], gen_len=10)]
+
+
+def test_overcommit_evicts_and_loses_nothing():
+    """Page-starved workload: budget 4 pages, two requests needing 3
+    worst-case each.  Conservative admission (1.0) serializes them;
+    overcommit 2.0 admits both optimistically, hits page exhaustion
+    mid-decode, evicts the youngest back to the queue (requeue path) and
+    still completes every request — with responses identical to the
+    conservative run (greedy decode re-prefills deterministically)."""
+    sv = ServeSpec(batch=2, prompt_len=8, gen=10, requests=2,
+                   page_budget=4, reduced=True)
+    cfg, ctx, params = _build(sv)
+
+    conservative = ServingEngine(cfg, ctx, params, sv)
+    for r in _two_requests():
+        conservative.submit(r)
+    _drive(conservative)
+    assert conservative.evictions == 0
+    assert conservative.stalled_admissions > 0   # the pool forced a wait
+    assert len(conservative.responses) == 2
+
+    optimistic = ServingEngine(cfg, ctx, params,
+                               dataclasses.replace(sv, overcommit=2.0))
+    for r in _two_requests():
+        optimistic.submit(r)
+    _drive(optimistic)
+    assert optimistic.evictions > 0              # preemption really fired
+    assert len(optimistic.responses) == 2        # no request lost
+    assert optimistic.responses == conservative.responses
+    evicted = [e["req"] for e in optimistic.journal if e["ev"] == "evict"]
+    assert evicted, "journal must record the eviction"
+    # the evicted request was re-admitted after its eviction
+    j = optimistic.journal
+    last_evict = max(i for i, e in enumerate(j) if e["ev"] == "evict")
+    assert any(e["ev"] == "admit" and e["req"] == j[last_evict]["req"]
+               for e in j[last_evict + 1:])
+
+
+def test_submit_rejects_undeadlockable_request():
+    """A request whose worst-case pages exceed a shard's capacity can
+    never be admitted — submit() rejects it up front instead of letting
+    admission deadlock on it."""
+    sv = ServeSpec(batch=2, prompt_len=8, gen=10, requests=1,
+                   page_budget=4, reduced=True)
+    cfg, ctx, params = _build(sv)
+    eng = ServingEngine(cfg, ctx, params, sv)
+    big = Request(req=0, tokens=np.zeros(17, np.int64), gen_len=24)
+    with pytest.raises(ValueError, match="worst-case"):
+        eng.submit(big)
+
+
+# ---------------------------------------------------------------------------
+# PagePool invariants (hypothesis-stub property tests)
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(n_shards=st.sampled_from([1, 2, 4]),
+       per_shard=st.integers(1, 8),
+       ops=st.lists(st.tuples(st.integers(0, 3), st.integers(1, 6)),
+                    min_size=1, max_size=40))
+def test_page_pool_invariants(n_shards, per_shard, ops):
+    """Random alloc/free traffic: no page is ever handed out twice, the
+    free + in-use partition always covers exactly the pool, and shard
+    locality survives any free/realloc interleaving (pages always return
+    to — and are always handed out from — their own shard's range)."""
+    n_pages = n_shards * per_shard
+    pool = PagePool(n_pages, n_shards)
+    rng = np.random.default_rng(per_shard * 1000 + len(ops))
+    held = []                                  # lists of allocated pages
+    for kind, n in ops:
+        if kind == 0 and held:                 # free a random allocation
+            pages = held.pop(rng.integers(len(held)))
+            pool.free(pages)
+        else:                                  # alloc n from a random shard
+            shard = int(rng.integers(n_shards))
+            got = pool.alloc(n, shard)
+            if got is None:
+                free_in_shard = len(pool.free_lists[shard])
+                assert n > free_in_shard       # refusal only when starved
+                continue
+            assert len(got) == n
+            lo, hi = shard * per_shard, (shard + 1) * per_shard
+            assert all(lo <= p < hi for p in got)   # shard locality
+            held.append(got)
+        # global invariants after every operation
+        out = [p for pages in held for p in pages]
+        assert len(out) == len(set(out))       # no double allocation
+        free = [p for fl in pool.free_lists for p in fl]
+        assert len(free) == len(set(free))     # no double free
+        assert sorted(out + free) == list(range(n_pages))
+        assert pool.in_use == len(out)
+        assert pool.high_water >= pool.in_use
+
+
+def test_page_pool_shard_free_realloc_locality():
+    """Freeing a foreign-shard page routes it back to its home shard's
+    free list, so a later same-shard alloc returns it (the regression the
+    property test covers, pinned deterministically)."""
+    pool = PagePool(8, n_shards=2)
+    a = pool.alloc(4, shard=0)
+    b = pool.alloc(4, shard=1)
+    assert a == [0, 1, 2, 3] and b == [4, 5, 6, 7]
+    pool.free([5])                             # shard-1 page
+    assert pool.alloc(1, shard=0) is None      # shard 0 still empty
+    assert pool.alloc(1, shard=1) == [5]

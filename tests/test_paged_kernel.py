@@ -70,6 +70,41 @@ def test_kernel_matches_reference_ragged(logit_cap):
     assert float(jnp.abs(scan[3]).max()) == 0.0
 
 
+@pytest.mark.parametrize("logit_cap", [0.0, 30.0])
+def test_grouped_kernel_matches_ungrouped_and_oracle(logit_cap):
+    """The grouped (one-MXU-call-per-page) variant ≡ the per-kv-head grid
+    ≡ the scan fallback ≡ the gather oracle, on the same ragged tables —
+    including a larger G where the auto heuristic would NOT pick it."""
+    from repro.kernels.paged_attention import paged_decode_attention
+
+    for G in (1, 2, 8):
+        B, K, hd, ps, pps = 4, 2, 16, 8, 6
+        P = B * pps
+        q = jnp.asarray(RNG.normal(size=(B, K, G, hd)), jnp.float32)
+        kp = jnp.asarray(RNG.normal(size=(P, K, ps, hd)), jnp.float32)
+        vp = jnp.asarray(RNG.normal(size=(P, K, ps, hd)), jnp.float32)
+        table = _ragged_tables(B, pps, P, [3, 6, 1, 4])
+        pos = jnp.asarray([19, 47, 0, -1], jnp.int32)
+        kw = dict(scale=hd ** -0.5, logit_cap=logit_cap)
+
+        grp = paged_decode_attention(q, kp, vp, table, pos, interpret=True,
+                                     grouped=True, **kw)
+        ung = paged_decode_attention(q, kp, vp, table, pos, interpret=True,
+                                     grouped=False, **kw)
+        scan = paged_decode_jnp(q, kp, vp, table, pos, **kw)
+        ref = decode_attention_paged(
+            q.reshape(B, 1, K * G, hd), kp, vp, table, pos,
+            **kw).reshape(B, K, G, hd)
+        act = slice(0, 3)                      # row 3 is the inactive slot
+        np.testing.assert_allclose(np.asarray(grp[act]), np.asarray(ung[act]),
+                                   atol=2e-6)
+        np.testing.assert_allclose(np.asarray(grp[act]),
+                                   np.asarray(scan[act]), atol=2e-6)
+        np.testing.assert_allclose(np.asarray(grp[act]), np.asarray(ref[act]),
+                                   atol=2e-6)
+        assert float(jnp.abs(grp[3]).max()) == 0.0  # inactive row → zeros
+
+
 def test_kernel_matches_dense_layout():
     """Paged walks ≡ the dense cache layout: pack the same K/V into a
     dense (B, K, T, hd) buffer and into pages, same masked softmax."""

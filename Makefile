@@ -3,9 +3,10 @@
 
 PY ?= python
 
-.PHONY: verify lint serve-smoke bench-smoke platform-serve-smoke dryrun
+.PHONY: verify lint serve-smoke bench-smoke prefix-cache-smoke \
+	platform-serve-smoke dryrun
 
-verify: lint platform-serve-smoke
+verify: lint platform-serve-smoke prefix-cache-smoke
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 # ruff is available in CI; locally the lint step degrades gracefully
@@ -27,6 +28,13 @@ serve-smoke:
 # Never rewrites the checked-in BENCH_serve_decode.json.
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.serve_decode --smoke
+
+# Prefix-cache regression gate: real-engine shared-prefix runs must pay
+# exactly one prefill over the shared span, keep ONE physical copy of the
+# prefix pages, and match solo runs token-for-token (aliasing is
+# answer-invisible).  Never rewrites BENCH_prefix_cache.json.
+prefix-cache-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.prefix_cache --smoke
 
 # Platform-serve regression gate: the real ServingEngine payload runs a
 # tiny workload under the platform and must produce responses byte-equal

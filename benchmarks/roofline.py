@@ -48,8 +48,9 @@ def roofline_row(arch: str, shape: str) -> dict | None:
     rec = load_cell(arch, shape)
     dr = rec.get("dryrun", {})
     an = rec.get("analysis", {})
-    if not rec:
-        # fresh checkout: the sweep hasn't been run — not a failure
+    if "dryrun" not in rec or "analysis" not in rec:
+        # fresh checkout or half-run sweep: the cell's dry-run/analysis
+        # pass hasn't produced both artifacts yet — not a failure
         return {"arch": arch, "shape": shape, "missing": True}
     if dr.get("skipped") or an.get("skipped"):
         return {"arch": arch, "shape": shape, "skipped": dr.get("skipped") or
@@ -113,14 +114,18 @@ def _paged_decode_pricing(arch: str, shape: str, hlo_bytes_dev: float) -> dict:
     sh = SHAPES[shape]
     run = get_run_config(arch, shape)
     dense_dev = decode_attn_bytes(cfg, sh, run, "dense") / CHIPS
-    kern_dev = decode_attn_bytes(cfg, sh, run, "kernel") / CHIPS
+    # dedup-aware: prefix pages shared across the batch (the serving
+    # engine's prefix cache) are physically read once per step.  Equal to
+    # the plain kernel walk at RunConfig.prefix_share_frac = 0, so cells
+    # without a share assumption price exactly as before.
+    kern_dev = decode_attn_bytes(cfg, sh, run, "kernel_unique") / CHIPS
     adj = max(hlo_bytes_dev - dense_dev + kern_dev, kern_dev)
     return {
         "attn_bytes_dense_dev": dense_dev,
         "attn_bytes_kernel_dev": kern_dev,
         "t_memory_paged_s": adj / HBM_BW,
         "kernel_ai_flops_per_byte": decode_arithmetic_intensity(
-            cfg, sh, run, "kernel"),
+            cfg, sh, run, "kernel_unique"),
     }
 
 

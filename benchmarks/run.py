@@ -54,6 +54,15 @@ def main() -> None:
 
     print()
     print("=" * 72)
+    print("# Prefix cache — shared-prefix dedup + CoW "
+          "(prefill tokens, resident pages, capacity)")
+    print("=" * 72)
+    from benchmarks import prefix_cache
+    failures = prefix_cache.main(
+        ["--smoke"] if args.quick else ["--no-write"]) or failures
+
+    print()
+    print("=" * 72)
     print("# Roofline — per (arch × shape), single-pod 16x16 "
           "(from dry-run artifacts)")
     print("=" * 72)

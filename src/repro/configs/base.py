@@ -274,6 +274,12 @@ class RunConfig:
     # worst-case S for every sequence; the scheduler admits a cell by this
     # allocated-page budget (launch.specs.decode_page_budget), not by S_max.
     page_occupancy: float = 1.0
+    # Expected fraction of each sequence's resident pages that are prefix
+    # pages SHARED across the batch (system prompts / few-shot templates,
+    # deduplicated by the engine's hash-addressed prefix cache).  Shared
+    # pages are physically resident once, so bandwidth and admission
+    # pricing count them once (launch.specs "kernel_unique" path).
+    prefix_share_frac: float = 0.0
 
 
 # Registry -------------------------------------------------------------------

@@ -87,6 +87,14 @@ class ServeSpec:
     # budget; on page exhaustion the engine evicts the youngest sequence
     # back to the queue (1.0 = conservative, never evicts)
     overcommit: float = 1.0
+    # hash-addressed prefix caching + copy-on-write pages: full prompt
+    # pages are content-hashed against a refcounted index; hits attach
+    # read-only (no prefill compute, no new residency).  Auto-disabled on
+    # configs without the chunked-prefill seam (non-all-global stacks)
+    prefix_cache: bool = True
+    # synthetic-workload knob: fraction of prompt_len every request shares
+    # as a common leading prefix (0 = fully independent prompts)
+    shared_prefix_frac: float = 0.0
     # platform-sim knob (virtual servers)
     request_time_s: float = 0.2
     # platform real-payload knobs: run the actual ServingEngine inside the
@@ -267,6 +275,8 @@ class JobSpec:
                 return "serve.request_time_s must be > 0"
             if w.overcommit < 1.0:
                 return "serve.overcommit must be >= 1.0"
+            if not 0.0 <= w.shared_prefix_frac <= 1.0:
+                return "serve.shared_prefix_frac must be in [0, 1]"
             if w.snapshot_every < 1:
                 return "serve.snapshot_every must be >= 1"
             if w.real_compute and w.requests < 1:

@@ -11,7 +11,17 @@ machine:
   by ``ServeSpec.overcommit`` (1.0 = the old conservative admission;
   > 1.0 = optimistic admission with preemption).  Pages are allocated
   lazily (prompt pages at admission, one page at a time as decode grows),
-  so overcommitted admission can actually run out — see evict.
+  so overcommitted admission can actually run out — see evict.  With
+  **prefix caching** on (the default for all-global paged decoders), each
+  prompt's full pages are chain-hashed against the shard's prefix index:
+  hits are attached read-only with a refcount bump — no prefill compute,
+  no new residency — a first-divergent-token overlap gets its page
+  copy-on-write duplicated, and the round's single ragged prefill covers
+  only the uncached tails (at per-row start offsets).  A request whose
+  prefix is being prefilled by an earlier request in the same round
+  defers one round and attaches instead of recomputing, so N requests
+  sharing a P-token prefix pay ~one prefill and one set of resident
+  prefix pages.
 * **step** — one batched decode step over every active slot; grows each
   sequence's page list on demand first.  On page exhaustion the engine
   **evicts the youngest sequence in the starving shard** back to the front
@@ -42,13 +52,39 @@ under the unchanged Guardian/LCM dependability machinery.
 """
 from __future__ import annotations
 
+import hashlib
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.jobspec import JobSpec, ServeSpec
+
+#: Parent hash of a prompt's first page in the chained prefix hash.
+PREFIX_ROOT = "root"
+
+
+def page_chain_hashes(tokens, page_size: int) -> List[Tuple[str, str]]:
+    """``(parent_hash, chain_hash)`` for every FULL page of a prompt.
+
+    The chain hash of page ``i`` commits to the entire prefix through
+    page ``i`` (it hashes the parent's chain hash plus the page's token
+    ids), so two prompts share page ``i`` iff they agree on ALL tokens
+    up to and including it — a hash hit is a safe alias, not a guess.
+    blake2b, not Python's builtin ``hash``: the index must round-trip
+    snapshots byte-identically across process incarnations, and builtin
+    hashes are salted per process."""
+    toks = np.asarray(tokens, np.int64)
+    out: List[Tuple[str, str]] = []
+    parent = PREFIX_ROOT
+    for i in range(len(toks) // page_size):
+        chunk = toks[i * page_size:(i + 1) * page_size]
+        h = hashlib.blake2b(parent.encode() + chunk.tobytes(),
+                            digest_size=16).hexdigest()
+        out.append((parent, h))
+        parent = h
+    return out
 
 
 class PagePool:
@@ -61,6 +97,19 @@ class PagePool:
     every decode gather/scatter data-shard-local — the runtime half of the
     locality contract whose spec half is
     ``dist.sharding.check_cache_locality``.
+
+    Pages are **refcounted** so prefix caching can alias one physical page
+    into many sequences' tables: ``alloc`` hands pages out at refcount 1,
+    ``attach`` bumps a cached page (pulling it back off the free list if
+    it was cached-but-free), ``free`` decrements — a page returns to its
+    shard's free list only when nobody references it.  Hash-addressed
+    prefix metadata (chain hash, parent hash, token content) lives in
+    ``page_meta`` with a per-shard ``prefix_index`` mapping
+    ``parent_hash -> {chain_hash: page}``.  A freed page KEEPS its
+    metadata (cached-but-free, vLLM-style: the KV bytes are intact until
+    the allocator reuses the physical page, at which point ``alloc``
+    deregisters it) — so a finished sequence's prefix stays hittable for
+    followers at zero residency cost.
     """
 
     def __init__(self, n_pages: int, n_shards: int = 1):
@@ -71,23 +120,85 @@ class PagePool:
         self.free_lists: List[List[int]] = [
             list(range(s * per, (s + 1) * per)) for s in range(n_shards)]
         self.high_water = 0
+        self.refcount: List[int] = [0] * n_pages
+        # page -> {"parent": str, "hash": str, "tokens": [int]}
+        self.page_meta: Dict[int, dict] = {}
+        # per shard: parent_hash -> {chain_hash: page}
+        self.prefix_index: List[Dict[str, Dict[str, int]]] = [
+            {} for _ in range(n_shards)]
 
     @property
     def in_use(self) -> int:
+        """Unique resident pages (each aliased page counts once)."""
         return self.n_pages - sum(len(f) for f in self.free_lists)
+
+    def shard_of(self, p: int) -> int:
+        per = self.n_pages // self.n_shards
+        return min(p // per, self.n_shards - 1)
 
     def alloc(self, n: int, shard: int = 0) -> Optional[List[int]]:
         fl = self.free_lists[shard]
         if n > len(fl):
             return None
         pages, self.free_lists[shard] = fl[:n], fl[n:]
+        for p in pages:
+            assert self.refcount[p] == 0, (p, self.refcount[p])
+            self.refcount[p] = 1
+            self._deregister(p)          # physical reuse ends its cache life
         self.high_water = max(self.high_water, self.in_use)
         return pages
 
     def free(self, pages: List[int]) -> None:
-        per = self.n_pages // self.n_shards
+        """Drop one reference per page; pages nobody references anymore
+        return to their home shard's free list (metadata retained —
+        cached-but-free until reallocated)."""
         for p in pages:
-            self.free_lists[min(p // per, self.n_shards - 1)].append(p)
+            assert self.refcount[p] > 0, f"free of unreferenced page {p}"
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self.free_lists[self.shard_of(p)].append(p)
+
+    def attach(self, p: int) -> None:
+        """Add a reference to a cached page (prefix hit).  A
+        cached-but-free page leaves the free list again — its KV bytes
+        were never touched, so no prefill is needed."""
+        if self.refcount[p] == 0:
+            self.free_lists[self.shard_of(p)].remove(p)
+        self.refcount[p] += 1
+        self.high_water = max(self.high_water, self.in_use)
+
+    def lookup(self, shard: int, parent: str, chain: str) -> Optional[int]:
+        return self.prefix_index[shard].get(parent, {}).get(chain)
+
+    def candidates(self, shard: int, parent: str) -> Dict[str, int]:
+        """All cached continuations of ``parent`` (CoW donor search)."""
+        return self.prefix_index[shard].get(parent, {})
+
+    def publish(self, page: int, parent: str, chain: str, tokens) -> bool:
+        """Register a full, immutable page in the prefix index.  First
+        publisher wins: an already-indexed chain (or a page already
+        carrying metadata) is left alone."""
+        idx = self.prefix_index[self.shard_of(page)]
+        kids = idx.setdefault(parent, {})
+        if chain in kids or page in self.page_meta:
+            if not kids:
+                del idx[parent]
+            return False
+        kids[chain] = page
+        self.page_meta[page] = {"parent": parent, "hash": chain,
+                                "tokens": [int(t) for t in tokens]}
+        return True
+
+    def _deregister(self, p: int) -> None:
+        meta = self.page_meta.pop(p, None)
+        if meta is None:
+            return
+        idx = self.prefix_index[self.shard_of(p)]
+        kids = idx.get(meta["parent"])
+        if kids is not None and kids.get(meta["hash"]) == p:
+            del kids[meta["hash"]]
+            if not kids:
+                del idx[meta["parent"]]
 
 
 def _set_page_tables(cache, host_table: np.ndarray):
@@ -105,6 +216,32 @@ def _set_page_tables(cache, host_table: np.ndarray):
             out.append(jnp.broadcast_to(table, leaf.shape).astype(jnp.int32))
         else:
             out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+def _copy_pool_pages(cache, pairs: List[Tuple[int, int]]):
+    """Device-side ``src -> dst`` page copies in every layer's K/V pool —
+    the copy half of copy-on-write: a sequence diverging mid-page from a
+    cached prefix gets the partially-shared page duplicated into its own
+    private page, then the chunk prefill overwrites the divergent tail
+    slots.  Scanned-group pool leaves carry a leading layers dim, so the
+    pages axis is 1 there and 0 on unrolled leaves (mirrors
+    ``models.model._slot_axis``)."""
+    import jax
+    import jax.numpy as jnp
+
+    srcs = jnp.asarray([s for s, _ in pairs], jnp.int32)
+    dsts = jnp.asarray([d for _, d in pairs], jnp.int32)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in leaves:
+        if getattr(path[-1], "key", None) in ("k_pages", "v_pages"):
+            ax = 1 if any(getattr(p, "key", None) == "groups"
+                          for p in path) else 0
+            vals = jnp.take(leaf, srcs, axis=ax)
+            leaf = leaf.at[dsts].set(vals) if ax == 0 \
+                else leaf.at[:, dsts].set(vals)
+        out.append(leaf)
     return jax.tree.unflatten(treedef, out)
 
 
@@ -127,10 +264,12 @@ class SeqRecord:
     request: Request
     pages: List[int]               # physical pages held, table order
     shard: int
-    need_worst: int                # worst-case pages (reservation unit)
+    need_worst: int                # reserved pages (worst case minus shared)
     remaining: int                 # tokens still to generate
     out_tokens: List[int] = field(default_factory=list)
     admit_seq: int = 0             # admission order; larger = younger
+    n_shared: int = 0              # leading pages attached from the index
+    cached_tokens: int = 0         # prompt tokens served from the cache
 
 
 class ServingEngine:
@@ -159,6 +298,12 @@ class ServingEngine:
             raise ValueError(
                 "--ragged-prefill needs an attention-only decoder; "
                 "recurrent/RWKV state would scan the padding")
+        # hash-addressed prefix caching: needs the chunked-prefill seam,
+        # which covers all-global paged decoders only (ring locals would
+        # have to replay the evicted prefix; vision frontends shift pos 0)
+        self.prefix_cache = bool(sv.prefix_cache) and ragged \
+            and set(cfg.layer_kinds()) == {GLOBAL_ATTN} \
+            and cfg.frontend != "vision"
 
         B, P, G = sv.batch, sv.prompt_len, sv.gen
         self.cfg, self.ctx, self.params, self.sv = cfg, ctx, params, sv
@@ -204,6 +349,11 @@ class ServingEngine:
         self.stalled_admissions = 0
         self.evictions = 0
         self._admit_seq = 0
+        self.prefill_tokens = 0      # prompt tokens actually computed
+        self.cached_tokens = 0       # prompt tokens served from the cache
+        self.prefix_hits = 0         # admissions reusing >= 1 cached page
+        self.prefix_misses = 0
+        self.cow_copies = 0          # copy-on-write page duplications
 
     # -- queue -------------------------------------------------------------
     def submit(self, request: Request) -> None:
@@ -231,6 +381,69 @@ class ServingEngine:
     def _shard_of(self, b: int) -> int:
         return b * self.pool.n_shards // self.B
 
+    def unique_resident_pages(self) -> int:
+        """Physical pages referenced by anyone (aliases count once)."""
+        return self.pool.in_use
+
+    def resident_prefix_pages(self) -> int:
+        """Unique physical pages serving some active sequence's cached
+        prompt span — the residency N prefix-sharing requests split."""
+        return len({p for rec in self.slots if rec is not None
+                    for p in rec.pages[:rec.n_shared]})
+
+    # -- prefix matching ---------------------------------------------------
+    def _match_prefix(self, req: Request, shard: int, pending) -> tuple:
+        """Match a prompt against the shard's prefix index.
+
+        Returns ``(shared, cow, C, hashes, defer)``: the leading cached
+        pages to attach read-only, an optional ``(src_page, overlap)``
+        copy-on-write donor for the first divergent page, the number of
+        prompt tokens served from the cache (``C = full-page span +
+        overlap``), the prompt's per-page chain hashes, and whether to
+        defer admission because an unmatched hash is being published by
+        THIS round's prefill (first-come-first-prefilled: the follower
+        waits one round and attaches instead of recomputing).
+
+        At least one prompt token is always left uncached (cap at
+        ``(L-1)//ps`` pages / ``L-1`` tokens): the next-token logits need
+        the last prompt token's hidden state, so a fully-cached prompt
+        must still compute its final token."""
+        L = len(req.tokens)
+        if not self.prefix_cache:
+            return [], None, 0, [], False
+        hashes = page_chain_hashes(req.tokens, self.ps)
+        shared: List[int] = []
+        for i in range((L - 1) // self.ps):
+            parent, chain = hashes[i]
+            page = self.pool.lookup(shard, parent, chain)
+            if page is None:
+                if chain in pending:
+                    return [], None, 0, hashes, True
+                break
+            shared.append(page)
+        m = len(shared)
+        cow = None
+        parent = hashes[m - 1][1] if m else PREFIX_ROOT
+        limit = min(self.ps, L - 1 - m * self.ps)
+        if limit > 0:
+            chunk = np.asarray(req.tokens[m * self.ps:
+                                          m * self.ps + limit], np.int64)
+            best_page, best_ov = None, 0
+            # deterministic donor choice: sorted by chain hash
+            for chain in sorted(self.pool.candidates(shard, parent)):
+                page = self.pool.candidates(shard, parent)[chain]
+                ptoks = np.asarray(
+                    self.pool.page_meta[page]["tokens"][:limit], np.int64)
+                n = min(len(chunk), len(ptoks))
+                ne = chunk[:n] != ptoks[:n]
+                ov = int(np.argmax(ne)) if ne.any() else n
+                if ov > best_ov:
+                    best_page, best_ov = page, ov
+            if best_ov > 0:
+                cow = (best_page, best_ov)
+        C = m * self.ps + (cow[1] if cow else 0)
+        return shared, cow, C, hashes, False
+
     # -- admission ---------------------------------------------------------
     def admit(self) -> List[int]:
         """One admission round: FIFO queue head into free slots while the
@@ -244,6 +457,9 @@ class ServingEngine:
             cache_slot_merge, cache_slot_view, num_pages)
 
         admitted: List[tuple] = []               # (slot, request)
+        plans: Dict[int, tuple] = {}             # slot -> (C, hashes, m)
+        cow_pairs: List[Tuple[int, int]] = []    # (src, dst) page copies
+        pending: set = set()                     # hashes this round publishes
         for b in range(self.B):
             if self.slots[b] is not None or not self.queue:
                 continue
@@ -253,22 +469,54 @@ class ServingEngine:
             need_worst = num_pages(L + req.gen_len, self.ps)
             cap = int(self.overcommit * self.per_shard)
             prompt_pages = num_pages(L, self.ps)
-            if self.reserved[shard] + need_worst > cap:
+            shared, cow, C, hashes, defer = self._match_prefix(
+                req, shard, pending)
+            if defer:
+                # its prefix is being prefilled RIGHT NOW by an earlier
+                # request in this round — next round it is a cache hit
                 self.stalled_admissions += 1
                 break                            # FIFO: no out-of-order admit
-            pages = self.pool.alloc(prompt_pages, shard)
+            m = len(shared)
+            # shared pages are refcount-held, not stolen-from, so only the
+            # private remainder needs a worst-case reservation — dedup
+            # shows up directly as admission capacity
+            reserve = need_worst - m
+            if self.reserved[shard] + reserve > cap:
+                self.stalled_admissions += 1
+                break
+            # attach BEFORE alloc: a cached-but-free shared page must
+            # leave the free list before the allocator could hand it out
+            # as somebody's private page
+            for p in shared:
+                self.pool.attach(p)
+            pages = self.pool.alloc(prompt_pages - m, shard)
             if pages is None:
+                self.pool.free(shared)           # roll the attaches back
                 self.stalled_admissions += 1
                 break
             self.queue.popleft()
-            self.reserved[shard] += need_worst
+            self.reserved[shard] += reserve
+            pages = shared + pages
             self.host_table[b, :prompt_pages] = pages
             self.host_table[b, prompt_pages:] = -1
             self._admit_seq += 1
             self.slots[b] = SeqRecord(
                 request=req, pages=pages, shard=shard,
-                need_worst=need_worst, remaining=req.gen_len,
-                admit_seq=self._admit_seq)
+                need_worst=reserve, remaining=req.gen_len,
+                admit_seq=self._admit_seq, n_shared=m, cached_tokens=C)
+            if cow is not None:
+                # duplicate the partially-shared page into this sequence's
+                # first private page; the chunk overwrites the divergent
+                # suffix slots before anything reads them
+                cow_pairs.append((cow[0], pages[m]))
+                self.cow_copies += 1
+            if self.prefix_cache:
+                if C > 0:
+                    self.prefix_hits += 1
+                else:
+                    self.prefix_misses += 1
+                pending.update(ch for _, ch in hashes[m:L // self.ps])
+            plans[b] = (C, hashes, m)
             admitted.append((b, req))
 
         if not admitted:
@@ -276,18 +524,31 @@ class ServingEngine:
         self.cache = _set_page_tables(self.cache, self.host_table)
 
         if self.ragged:
-            # one batched ragged prefill for the whole round: pad to the
-            # round max, bucketed to a page multiple (bounds recompiles)
-            round_max = max(len(r.tokens) for _, r in admitted)
+            # one batched ragged prefill for the whole round over the
+            # UNCACHED prompt tails only: pad to the round's max tail,
+            # bucketed to a page multiple (bounds recompiles)
+            round_max = max(len(r.tokens) - plans[b][0] for b, r in admitted)
             S0 = -(-round_max // self.ps) * self.ps
             toks_in = np.zeros((self.B, S0), admitted[0][1].tokens.dtype)
             lens = np.zeros((self.B,), np.int32)
+            starts = np.zeros((self.B,), np.int32)
             for b, r in admitted:
-                toks_in[b, :len(r.tokens)] = r.tokens
-                lens[b] = len(r.tokens)
-            logits, self.cache = self.prefill(
-                self.params, {"tokens": jnp.asarray(toks_in)}, self.cache,
-                jnp.asarray(lens))
+                C = plans[b][0]
+                toks_in[b, :len(r.tokens) - C] = r.tokens[C:]
+                lens[b] = len(r.tokens) - C
+                starts[b] = C
+            if cow_pairs:
+                self.cache = _copy_pool_pages(self.cache, cow_pairs)
+            if self.prefix_cache:
+                # chunked path even at starts == 0: one numeric family for
+                # every prefill, so evict-replay stays byte-identical
+                logits, self.cache = self.prefill(
+                    self.params, {"tokens": jnp.asarray(toks_in)},
+                    self.cache, jnp.asarray(lens), jnp.asarray(starts))
+            else:
+                logits, self.cache = self.prefill(
+                    self.params, {"tokens": jnp.asarray(toks_in)},
+                    self.cache, jnp.asarray(lens))
             nxt_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
 
         out: List[int] = []
@@ -302,12 +563,25 @@ class ServingEngine:
             else:
                 tok = int(nxt_tok[b])
             rec = self.slots[b]
+            C, hashes, m = plans[b]
+            if self.prefix_cache:
+                # the round's freshly prefilled full pages become cache
+                # content (including a full CoW page — its bytes are now
+                # exactly the chain's)
+                for i in range(m, len(r.tokens) // self.ps):
+                    parent, chain = hashes[i]
+                    self.pool.publish(
+                        rec.pages[i], parent, chain,
+                        r.tokens[i * self.ps:(i + 1) * self.ps])
+            self.prefill_tokens += len(r.tokens) - C
+            self.cached_tokens += C
             rec.out_tokens.append(tok)
             rec.remaining -= 1
             self.toks[b, 0] = tok
             self.pos[b] = len(r.tokens)
             self.generated += 1
-            self.journal.append({"ev": "admit", "req": r.req, "slot": b})
+            self.journal.append({"ev": "admit", "req": r.req, "slot": b,
+                                 "cached": C})
             out.append(r.req)
             if rec.remaining <= 0:
                 self.finish(b)                   # gen_len == 1: prefill was it
@@ -442,7 +716,9 @@ class ServingEngine:
                     "need_worst": rec.need_worst,
                     "remaining": rec.remaining,
                     "out_tokens": list(rec.out_tokens),
-                    "admit_seq": rec.admit_seq}
+                    "admit_seq": rec.admit_seq,
+                    "n_shared": rec.n_shared,
+                    "cached_tokens": rec.cached_tokens}
 
         return {
             "queue": [(r.req, np.asarray(r.tokens).copy(), r.gen_len)
@@ -451,6 +727,12 @@ class ServingEngine:
             "host_table": self.host_table.copy(),
             "free_lists": [list(f) for f in self.pool.free_lists],
             "high_water": self.pool.high_water,
+            "refcount": list(self.pool.refcount),
+            "page_meta": {int(p): {"parent": m["parent"], "hash": m["hash"],
+                                   "tokens": list(m["tokens"])}
+                          for p, m in self.pool.page_meta.items()},
+            "prefix_index": [{par: dict(kids) for par, kids in idx.items()}
+                             for idx in self.pool.prefix_index],
             "reserved": list(self.reserved),
             "toks": self.toks.copy(),
             "pos": self.pos.copy(),
@@ -460,7 +742,12 @@ class ServingEngine:
                       "generated": self.generated,
                       "stalled_admissions": self.stalled_admissions,
                       "evictions": self.evictions,
-                      "admit_seq": self._admit_seq},
+                      "admit_seq": self._admit_seq,
+                      "prefill_tokens": self.prefill_tokens,
+                      "cached_tokens": self.cached_tokens,
+                      "prefix_hits": self.prefix_hits,
+                      "prefix_misses": self.prefix_misses,
+                      "cow_copies": self.cow_copies},
             "journal_len": len(self.journal),
             "cache": jax.device_get(self.cache),
         }
@@ -485,10 +772,20 @@ class ServingEngine:
                 pages=list(doc["pages"]), shard=doc["shard"],
                 need_worst=doc["need_worst"], remaining=doc["remaining"],
                 out_tokens=list(doc["out_tokens"]),
-                admit_seq=doc["admit_seq"]))
+                admit_seq=doc["admit_seq"],
+                n_shared=doc.get("n_shared", 0),
+                cached_tokens=doc.get("cached_tokens", 0)))
         self.host_table = np.asarray(snap["host_table"]).copy()
         self.pool.free_lists = [list(f) for f in snap["free_lists"]]
         self.pool.high_water = snap["high_water"]
+        self.pool.refcount = list(snap["refcount"])
+        self.pool.page_meta = {
+            int(p): {"parent": m["parent"], "hash": m["hash"],
+                     "tokens": [int(t) for t in m["tokens"]]}
+            for p, m in snap["page_meta"].items()}
+        self.pool.prefix_index = [
+            {par: dict(kids) for par, kids in idx.items()}
+            for idx in snap["prefix_index"]]
         self.reserved = list(snap["reserved"])
         self.toks = np.asarray(snap["toks"]).copy()
         self.pos = np.asarray(snap["pos"]).copy()
@@ -500,6 +797,11 @@ class ServingEngine:
         self.stalled_admissions = st["stalled_admissions"]
         self.evictions = st["evictions"]
         self._admit_seq = st["admit_seq"]
+        self.prefill_tokens = st.get("prefill_tokens", 0)
+        self.cached_tokens = st.get("cached_tokens", 0)
+        self.prefix_hits = st.get("prefix_hits", 0)
+        self.prefix_misses = st.get("prefix_misses", 0)
+        self.cow_copies = st.get("cow_copies", 0)
         self.cache = jax.tree.map(jnp.asarray, snap["cache"])
 
     # -- drive to completion --------------------------------------------------
@@ -527,13 +829,19 @@ def synthesize_requests(cfg, sv: ServeSpec, seed: int,
 
     rng = np.random.default_rng(seed)
     n_req, P, G = sv.requests, sv.prompt_len, sv.gen
-    prompts = np.asarray(jax.random.randint(
+    prompts = np.array(jax.random.randint(
         jax.random.key(1), (n_req, P), 0, cfg.vocab_size))
+    # shared-prefix workload (system prompt / few-shot template traffic):
+    # every request opens with request 0's leading span
+    C = int(round(P * getattr(sv, "shared_prefix_frac", 0.0)))
+    if C > 0:
+        prompts[:, :C] = prompts[0, :C]
     gen_lens = rng.integers(max(G // 2, 1), G + 1, size=n_req)
     # ragged workload: per-request prompt lengths in [P/2, P]; the lockstep
-    # fallback serves every prompt at full length P
-    prompt_lens = rng.integers(max(P // 2, 1), P + 1, size=n_req) if ragged \
-        else np.full(n_req, P, np.int64)
+    # fallback serves every prompt at full length P.  Shared-prefix runs
+    # keep full-length prompts so the share ratio is exact.
+    prompt_lens = rng.integers(max(P // 2, 1), P + 1, size=n_req) \
+        if ragged and C == 0 else np.full(n_req, P, np.int64)
     return [Request(req=r, tokens=prompts[r, :int(prompt_lens[r])].copy(),
                     gen_len=int(gen_lens[r])) for r in range(n_req)]
 

@@ -169,6 +169,12 @@ def run_continuous(cfg, ctx, params, sv: ServeSpec, seed: int = 0) -> int:
           f"{engine.pool.high_water}, admission stalls "
           f"{engine.stalled_admissions}, evictions {engine.evictions} "
           f"(overcommit {engine.overcommit:g})")
+    if engine.prefix_cache:
+        total = engine.prefill_tokens + engine.cached_tokens
+        print(f"  prefix cache: {engine.prefix_hits} hits / "
+              f"{engine.prefix_misses} misses, {engine.cached_tokens}/"
+              f"{total} prompt tokens served from cache, "
+              f"{engine.cow_copies} CoW copies")
     print(f"  completed {len(engine.responses)}/{n_req} in "
           f"{engine.decode_steps} decode steps, "
           f"{dt*1e3:.1f} ms ({engine.generated/max(dt,1e-9):.0f} tok/s "

@@ -64,6 +64,13 @@ def parse_spec(argv=None) -> JobSpec:
     ap.add_argument("--no-ragged-prefill", dest="ragged_prefill",
                     action="store_const", const=False,
                     help="force per-slot lockstep prefill")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false", default=True,
+                    help="disable hash-addressed prefix caching / "
+                         "copy-on-write page sharing")
+    ap.add_argument("--shared-prefix", type=float, default=0.0,
+                    help="synthetic workload: fraction of prompt-len every "
+                         "request shares as a common leading prefix")
     args = ap.parse_args(argv)
 
     return JobSpec(
@@ -85,6 +92,8 @@ def parse_spec(argv=None) -> JobSpec:
             overcommit=args.overcommit,
             use_pallas=args.use_pallas,
             ragged_prefill=args.ragged_prefill,
+            prefix_cache=args.prefix_cache,
+            shared_prefix_frac=args.shared_prefix,
         ))
 
 

@@ -152,13 +152,19 @@ def decode_attn_bytes(cfg: ModelConfig, shape: ShapeConfig, run=None,
     * ``kernel``    — the flash-decode kernel / scan fallback: only
       *resident* pages are touched (``run.page_occupancy`` of the table),
       and at least the one page holding the current position.
+    * ``kernel_unique`` — the kernel walk priced by UNIQUE physical
+      pages: ``run.prefix_share_frac`` of each sequence's resident pages
+      are prefix pages aliased across the whole batch (the engine's
+      hash-addressed prefix cache), physically read once per step instead
+      of B times.  Equal to ``kernel`` at share 0.
 
     The ratio reference/kernel ≈ 1/occupancy is the modeled win the
-    ``serve_decode`` benchmark lane sweeps.
+    ``serve_decode`` benchmark lane sweeps; kernel/kernel_unique is the
+    dedup win ``prefix_cache`` sweeps.
     """
     from repro.configs.base import GLOBAL_ATTN
     from repro.models.model import num_pages
-    if path not in ("dense", "reference", "kernel"):
+    if path not in ("dense", "reference", "kernel", "kernel_unique"):
         raise ValueError(path)
     B, S = shape.global_batch, shape.seq_len
     n_global = sum(1 for k in cfg.layer_kinds() if k == GLOBAL_ATTN)
@@ -172,8 +178,22 @@ def decode_attn_bytes(cfg: ModelConfig, shape: ShapeConfig, run=None,
         tokens = B * pps * ps
     else:
         occ = getattr(run, "page_occupancy", 1.0) if run is not None else 1.0
-        tokens = B * max(int(-(-pps * occ // 1)), 1) * ps
+        resident = max(int(-(-pps * occ // 1)), 1)
+        if path == "kernel_unique":
+            tokens = unique_decode_pages(B, resident, run) * ps
+        else:
+            tokens = B * resident * ps
     return 2 * tokens * K * hd * isize * n_global          # K and V
+
+
+def unique_decode_pages(batch: int, resident_per_seq: int, run=None) -> int:
+    """Unique physical pages a decode step touches when
+    ``run.prefix_share_frac`` of every sequence's resident pages are one
+    batch-wide aliased prefix: the shared span is counted once, each
+    sequence's private remainder B times."""
+    f = getattr(run, "prefix_share_frac", 0.0) if run is not None else 0.0
+    shared = min(int(resident_per_seq * f), resident_per_seq)
+    return batch * (resident_per_seq - shared) + shared
 
 
 def decode_arithmetic_intensity(cfg: ModelConfig, shape: ShapeConfig,
@@ -266,4 +286,15 @@ def placement_report(cfg: ModelConfig, shape: ShapeConfig, run, mesh: Mesh,
             cfg, shape, run, "kernel") / n_dev / 1e9
         out["decode_attn_gb_step_ref"] = decode_attn_bytes(
             cfg, shape, run, "reference") / n_dev / 1e9
+        if getattr(run, "prefix_share_frac", 0.0) > 0.0:
+            # dedup-aware residency/bandwidth: aliased prefix pages are
+            # physically one page — price what is actually resident/read,
+            # not the per-sequence double count
+            from repro.models.model import num_pages as _np
+            occ = getattr(run, "page_occupancy", 1.0)
+            r = max(int(-(-_np(shape.seq_len, cfg.page_size) * occ // 1)), 1)
+            out["decode_attn_gb_step_unique"] = decode_attn_bytes(
+                cfg, shape, run, "kernel_unique") / n_dev / 1e9
+            out["cache_pages_unique"] = float(
+                unique_decode_pages(shape.global_batch, r, run))
     return {k: round(v, 3) for k, v in out.items()}

@@ -136,6 +136,63 @@ def decode_attention_jnp(
     return out.reshape(B, 1, H, vd).astype(q.dtype)
 
 
+def prefill_attention_paged(
+    q: jax.Array,            # (B, S0, H, hd) chunk queries, rotated
+    k_pages: jax.Array,      # (P, K, page_size, hd) shared physical pool
+    v_pages: jax.Array,      # (P, K, page_size, vd)
+    page_table: jax.Array,   # (B, pages_per_seq) int32; -1 = unallocated
+    pos_q: jax.Array,        # (B, S0) absolute positions of the chunk queries
+    lengths: jax.Array,      # (B,) valid chunk tokens; 0 = inactive row
+    *,
+    scale: float,
+    logit_cap: float = 0.0,
+) -> jax.Array:
+    """Chunked-prefill attention over the page table (prefix caching).
+
+    The chunk's own K/V were already written into the pool
+    (``_write_prefill_paged_offset`` — write-then-read), so one masked walk
+    serves both the *cached prefix* (shared, possibly aliased pages holding
+    positions ``< pos_q``) and within-chunk causality: a key at slot ``t``
+    of an allocated page is live iff ``t <= pos_q[b, s]``.  Rows with
+    ``lengths == 0`` (slots mid-decode in a continuous batch) return zero
+    rows the caller ignores.
+
+    Like ``decode_attention_paged`` this is the reference-grade walk: the
+    gather materializes the table-bounded (B, pps·ps, K, hd) view.  Tail
+    chunks are short under prefix caching (the whole point), so the
+    transient (B, S0, K, G, T) score block stays small; a Pallas chunk
+    kernel is future work."""
+    B, S0, H, hd = q.shape
+    _, K, ps, _ = k_pages.shape
+    G = H // K
+    pps = page_table.shape[1]
+    T = pps * ps
+    kb = jnp.take(k_pages, page_table, axis=0, mode="fill",
+                  fill_value=0)                      # (B, pps, K, ps, hd)
+    vb = jnp.take(v_pages, page_table, axis=0, mode="fill", fill_value=0)
+    kb = kb.transpose(0, 2, 1, 3, 4).reshape(B, K, T, kb.shape[-1])
+    vb = vb.transpose(0, 2, 1, 3, 4).reshape(B, K, T, vb.shape[-1])
+    pos_k = jnp.where(jnp.repeat(page_table >= 0, ps, axis=1),
+                      jnp.arange(T, dtype=jnp.int32)[None, :], -1)   # (B, T)
+    qg = q.reshape(B, S0, K, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bskgd,bktd->bskgt", qg, kb.astype(jnp.float32))
+    s = softcap(s, logit_cap)
+    valid = (pos_k[:, None, :] >= 0) \
+        & (pos_k[:, None, :] <= pos_q[:, :, None]) \
+        & (jnp.arange(S0, dtype=jnp.int32)[None, :, None]
+           < lengths.astype(jnp.int32)[:, None, None])               # (B,S0,T)
+    vm = valid[:, :, None, None, :]
+    s = jnp.where(vm, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    # mask p explicitly: fully-dead rows (inactive slots) would otherwise
+    # see exp(NEG_INF - NEG_INF) == 1 (NEG_INF is a finite sentinel)
+    p = jnp.where(vm, jnp.exp(s - m), 0.0)
+    l = p.sum(axis=-1)
+    out = jnp.einsum("bskgt,bktd->bskgd", p, vb.astype(jnp.float32))
+    out = out / jnp.maximum(l, 1e-37)[..., None]
+    return out.reshape(B, S0, H, vb.shape[-1]).astype(q.dtype)
+
+
 def decode_attention_paged(
     q: jax.Array,            # (B, 1, H, hd)
     k_pages: jax.Array,      # (P, K, page_size, hd) shared physical pool
@@ -244,6 +301,22 @@ def gqa_attention(
             if cache is not None:       # prefill: stash encoder K/V
                 new_cache = {"k": k.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
                              "v": v.transpose(0, 2, 1, 3).astype(cache["v"].dtype)}
+        elif pos.ndim == 2:
+            # chunked prefix prefill (prefix caching): per-row absolute
+            # positions — the chunk opens at each row's first uncached
+            # token, and the cached prefix K/V already sit in (possibly
+            # aliased) pages.  Write-then-read: the chunk's K/V go into
+            # the private tail pages first, then ONE masked paged walk
+            # covers both the cached prefix and within-chunk causality.
+            if cache is None or "k_pages" not in cache or window:
+                raise NotImplementedError(
+                    "chunked prefix prefill needs the paged global layout")
+            assert lengths is not None, "chunked prefill is ragged-only"
+            new_cache = _write_prefill_paged_offset(cache, k, v, lengths, pos)
+            out = prefill_attention_paged(
+                q, new_cache["k_pages"], new_cache["v_pages"],
+                new_cache["page_table"], pos, lengths,
+                scale=scale, logit_cap=cfg.attn_logit_softcap)
         else:
             S = q.shape[1]
             if ctx.use_pallas and S % 128 == 0:
@@ -376,6 +449,33 @@ def _write_prefill_paged(cache: Cache, k, v,
                                           mode="drop")
         vp = vp.at[phys, :, :hi - lo].set(v[:, :, lo:hi].astype(vp.dtype),
                                           mode="drop")
+    return {"k_pages": kp, "v_pages": vp, "page_table": pt}
+
+
+def _write_prefill_paged_offset(cache: Cache, k, v, lengths, pos) -> Cache:
+    """Offset form of :func:`_write_prefill_paged` for chunked prefix
+    prefill: the chunk's token ``s`` of row ``b`` lands at absolute
+    position ``pos[b, s]`` (= the row's first uncached position + s), so
+    the page walk cannot be a static loop — scatter per token instead.
+
+    Only tokens ``s < lengths[b]`` write.  The engine's CoW rule
+    guarantees a chunk never writes a *shared* page (the first written
+    page is always a private copy), so scatter targets are unique.
+    Invalid rows / unallocated table entries redirect one past the pool
+    and are dropped (``mode="drop"``)."""
+    kp, vp, pt = cache["k_pages"], cache["v_pages"], cache["page_table"]
+    B, S0 = k.shape[:2]
+    ps = kp.shape[2]
+    pps = pt.shape[1]
+    pidx = pos // ps                                           # (B, S0)
+    entry = jnp.take_along_axis(pt, jnp.clip(pidx, 0, pps - 1), axis=1)
+    valid = (jnp.arange(S0, dtype=jnp.int32)[None, :]
+             < lengths.astype(jnp.int32)[:, None]) \
+        & (entry >= 0) & (pidx < pps)
+    phys = jnp.where(valid, entry, jnp.int32(kp.shape[0]))     # (B, S0)
+    off = pos % ps
+    kp = kp.at[phys, :, off].set(k.astype(kp.dtype), mode="drop")
+    vp = vp.at[phys, :, off].set(v.astype(vp.dtype), mode="drop")
     return {"k_pages": kp, "v_pages": vp, "page_table": pt}
 
 

@@ -301,6 +301,7 @@ def forward(
     pos: Optional[jax.Array] = None, # decode: scalar position
     remat_policy: str = "none",
     lengths: Optional[jax.Array] = None,  # ragged prefill: (B,) prompt lens
+    starts: Optional[jax.Array] = None,   # chunked prefill: (B,) first positions
 ) -> Tuple[jax.Array, Optional[Tree], jax.Array]:
     """Returns (logits, new_cache, aux_loss).
 
@@ -317,6 +318,14 @@ def forward(
     being prefilled this round) leave the cache untouched.  Supported for
     attention-only stacks (paged globals + ring locals): recurrent / RWKV
     / MLA-latent / enc-dec states scan padding into their carries.
+
+    ``starts`` makes a ragged prefill *chunked* (prefix caching): row
+    ``b``'s tokens are the uncached TAIL of its prompt, opening at
+    absolute position ``starts[b]`` — the cached prefix K/V already sit
+    in (possibly shared) pages its table points to, so attention walks
+    the whole page table while only the chunk is computed.  Needs an
+    all-global paged decoder (ring locals would have to replay the
+    evicted prefix) and no frontend (frontend embeds precede position 0).
     """
     params = cast_params(params, ctx.dtype)
     tokens = batch["tokens"]
@@ -331,6 +340,15 @@ def forward(
                 f"(got {bad or 'mla/enc-dec'}): recurrent state would "
                 f"scan the padding")
         lengths = jnp.asarray(lengths, jnp.int32)
+    if starts is not None:
+        if lengths is None:
+            raise ValueError("starts requires ragged prefill (lengths)")
+        if set(cfg.layer_kinds()) != {GLOBAL_ATTN} or cfg.use_mla \
+                or cfg.is_encoder_decoder or cfg.frontend == "vision":
+            raise NotImplementedError(
+                "chunked prefix prefill needs an all-global paged decoder "
+                "without a frontend")
+        starts = jnp.asarray(starts, jnp.int32)
     enc_out = None
     # decode reuses the cross K/V cached at prefill — no encoder re-run
     if cfg.is_encoder_decoder and mode != "decode":
@@ -349,6 +367,9 @@ def forward(
         p_arr = jnp.asarray(pos, jnp.int32)
     else:
         p_arr = jnp.arange(h.shape[1], dtype=jnp.int32)
+        if starts is not None:
+            # chunked prefill: per-row absolute positions (B, S0)
+            p_arr = starts[:, None] + p_arr[None, :]
     if lengths is not None and n_front:
         # frontend tokens are real (per-row) prefix content: fold them into
         # the valid length; length-0 rows stay untouched

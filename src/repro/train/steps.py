@@ -157,11 +157,14 @@ def make_prefill_step(cfg: ModelConfig, ctx: Ctx):
 
     ``lengths`` (B,) switches to the *ragged* prefill path: prompts padded
     to the batch max, per-row last-valid logits, per-row masked cache
-    writes (length-0 rows untouched — see models.model.forward)."""
-    def prefill_step(params, batch, cache, lengths=None):
+    writes (length-0 rows untouched — see models.model.forward).
+    ``starts`` (B,) additionally makes it *chunked* (prefix caching): row
+    ``b``'s tokens are the uncached tail of its prompt, opening at
+    absolute position ``starts[b]``."""
+    def prefill_step(params, batch, cache, lengths=None, starts=None):
         logits, new_cache, _ = forward(cfg, params, batch, ctx,
                                        mode="prefill", cache=cache,
-                                       lengths=lengths)
+                                       lengths=lengths, starts=starts)
         return logits, new_cache
     return prefill_step
 

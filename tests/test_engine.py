@@ -1,7 +1,10 @@
 """ServingEngine: snapshot/restore golden-token equivalence, the
-requeue-on-eviction path (optimistic admission), and PagePool allocator
-invariants under random alloc/free traffic (hypothesis-stub properties)."""
+requeue-on-eviction path (optimistic admission), hash-addressed prefix
+caching (shared-prefix dedup, CoW divergence, evict-then-readmit, restore
+with live refcounts), and PagePool allocator/refcount invariants under
+random traffic (hypothesis-stub properties)."""
 import dataclasses
+from collections import Counter
 
 import jax
 import jax.numpy as jnp
@@ -195,6 +198,58 @@ def test_page_pool_invariants(n_shards, per_shard, ops):
         assert pool.high_water >= pool.in_use
 
 
+@settings(max_examples=30, deadline=None)
+@given(per_shard=st.integers(2, 8),
+       ops=st.lists(st.tuples(st.integers(0, 3), st.integers(1, 4)),
+                    min_size=1, max_size=50))
+def test_page_pool_refcount_invariants(per_shard, ops):
+    """Random alloc/free/publish/attach traffic (the prefix-cache op mix):
+    a page's refcount always equals the number of live holders, the free
+    lists never intersect the referenced set, nothing is double-freed, and
+    every page is either free or referenced — never both, never neither."""
+    n_shards = 2
+    n_pages = n_shards * per_shard
+    pool = PagePool(n_pages, n_shards)
+    rng = np.random.default_rng(per_shard * 7 + len(ops))
+    held = []                      # page lists; each entry holds one ref/page
+    for kind, n in ops:
+        shard = int(rng.integers(n_shards))
+        if kind == 0 and held:                 # release one holder
+            pool.free(held.pop(rng.integers(len(held))))
+        elif kind == 1:                        # fresh allocation
+            got = pool.alloc(n, shard)
+            if got is not None:
+                held.append(got)
+        elif kind == 2 and held:               # publish a held page
+            pages = held[int(rng.integers(len(held)))]
+            p = pages[int(rng.integers(len(pages)))]
+            pool.publish(p, "root", f"chain-{p}", [p])
+        else:                                  # prefix hit: attach via index
+            kids = pool.candidates(shard, "root")
+            if kids:
+                chain = sorted(kids)[int(rng.integers(len(kids)))]
+                p = pool.lookup(shard, "root", chain)
+                pool.attach(p)
+                held.append([p])
+        # invariants after every operation
+        holders = Counter(p for pages in held for p in pages)
+        free = [p for fl in pool.free_lists for p in fl]
+        assert len(free) == len(set(free))     # no double free
+        assert not set(free) & set(holders)    # free ∩ referenced = ∅
+        for p in range(n_pages):
+            assert pool.refcount[p] == holders.get(p, 0)
+        assert sorted(set(free) | set(holders)) == list(range(n_pages))
+        assert pool.in_use == len(holders)     # unique, not sum of refs
+        assert pool.high_water >= pool.in_use
+        # the index never points at a page whose metadata disagrees
+        for s in range(n_shards):
+            for parent, kids in pool.prefix_index[s].items():
+                for chain, p in kids.items():
+                    assert pool.page_meta[p]["hash"] == chain
+                    assert pool.page_meta[p]["parent"] == parent
+                    assert pool.shard_of(p) == s
+
+
 def test_page_pool_shard_free_realloc_locality():
     """Freeing a foreign-shard page routes it back to its home shard's
     free list, so a later same-shard alloc returns it (the regression the
@@ -206,3 +261,156 @@ def test_page_pool_shard_free_realloc_locality():
     pool.free([5])                             # shard-1 page
     assert pool.alloc(1, shard=0) is None      # shard 0 still empty
     assert pool.alloc(1, shard=1) == [5]
+
+
+def test_page_pool_cached_but_free_lifecycle():
+    """A freed published page stays hittable (cached-but-free) until the
+    allocator reuses its physical page, which deregisters it."""
+    pool = PagePool(4, n_shards=1)
+    (p,) = pool.alloc(1)
+    pool.publish(p, "root", "c0", [1, 2])
+    pool.free([p])                             # refcount 0, still indexed
+    assert pool.lookup(0, "root", "c0") == p
+    pool.attach(p)                             # hit revives it off the list
+    assert pool.refcount[p] == 1 and pool.in_use == 1
+    pool.free([p])
+    # exhaust the pool: the cached page is eventually handed back out,
+    # and reuse must end its cache life
+    got = pool.alloc(4)
+    assert got is not None and p in got
+    assert pool.lookup(0, "root", "c0") is None
+    assert p not in pool.page_meta
+
+
+# ---------------------------------------------------------------------------
+# Prefix caching: golden-token equivalence
+# ---------------------------------------------------------------------------
+def _solo_response(cfg, ctx, params, sv, req):
+    """One request through a fresh engine (no sharing possible)."""
+    eng = ServingEngine(cfg, ctx, params, sv)
+    eng.submit(req)
+    eng.run()
+    return eng.responses[req.req]
+
+
+def test_shared_prefix_batch_equals_solo():
+    """A batch sharing a page-aligned 75% prefix pays one prefill over the
+    shared span, keeps ONE physical copy of the prefix pages, and still
+    answers every request exactly as a solo run would — aliasing is
+    invisible to greedy decode."""
+    sv = ServeSpec(batch=4, prompt_len=32, gen=4, requests=4,
+                   page_budget=12, reduced=True, shared_prefix_frac=0.75)
+    cfg, ctx, params = _build(sv)
+    eng = ServingEngine(cfg, ctx, params, sv)
+    reqs = synthesize_requests(cfg, sv, seed=0, ragged=eng.ragged)
+    for r in reqs:
+        eng.submit(r)
+    eng.admit()                    # round 1: the leader (followers defer)
+    assert sum(s is not None for s in eng.slots) == 1
+    eng.admit()                    # round 2: followers hit the index
+    assert eng.prefix_hits == 3 and eng.prefix_misses == 1
+    assert eng.cow_copies == 0     # 24 shared tokens = 3 whole pages
+    ps = eng.ps
+    assert eng.resident_prefix_pages() == 24 // ps
+    # one prefill over the shared span: 32 + 3 private 8-token tails
+    assert eng.prefill_tokens == 32 + 3 * 8
+    assert eng.cached_tokens == 3 * 24
+    eng.run()
+    assert len(eng.responses) == 4
+    for r in reqs:
+        assert eng.responses[r.req] == _solo_response(cfg, ctx, params,
+                                                      sv, r), r.req
+
+
+def test_cow_divergence_mid_page():
+    """Two prompts agreeing through token 19 and diverging at token 20
+    (mid-page): the follower attaches the 2 whole shared pages, CoW-copies
+    the partially-shared third page (4 of 8 tokens reused), prefills only
+    the divergent tail — and answers exactly as its solo run."""
+    sv = ServeSpec(batch=2, prompt_len=24, gen=4, requests=2,
+                   page_budget=12, reduced=True)
+    cfg, ctx, params = _build(sv)
+    base = np.array(jax.random.randint(
+        jax.random.key(3), (24,), 0, cfg.vocab_size))
+    fork = base.copy()
+    fork[20] = (fork[20] + 1) % cfg.vocab_size
+    reqs = [Request(req=0, tokens=base, gen_len=4),
+            Request(req=1, tokens=fork, gen_len=4)]
+
+    eng = ServingEngine(cfg, ctx, params, sv)
+    for r in reqs:
+        eng.submit(r)
+    eng.admit()                    # leader prefills + publishes
+    eng.admit()                    # follower: 2-page hit + mid-page CoW
+    assert eng.prefix_hits == 1 and eng.cow_copies == 1
+    assert eng.cached_tokens == 20            # 2 pages + 4-token overlap
+    assert eng.prefill_tokens == 24 + 4
+    # the CoW page is private: page 2 of the two rows must differ
+    recs = [s for s in eng.slots if s is not None]
+    assert recs[0].pages[2] != recs[1].pages[2]
+    assert recs[0].pages[:2] == recs[1].pages[:2]     # aliased prefix
+    eng.run()
+    for r in reqs:
+        assert eng.responses[r.req] == _solo_response(cfg, ctx, params,
+                                                      sv, r), r.req
+
+
+def test_evict_then_readmit_hits_cached_prefix():
+    """Optimistic admission under page pressure with identical prompts:
+    the evicted follower's private pages are freed but the shared prefix
+    stays cached, so its re-admission is another prefix hit — and the
+    final responses match the conservative (never-evicting) run."""
+    # the leader generates longer than the follower, so it is still alive
+    # (holding the last free page) when the follower's decode crosses its
+    # own page boundary one step later — forcing the eviction
+    sv = ServeSpec(batch=2, prompt_len=16, gen=12, requests=2,
+                   page_budget=6, reduced=True)
+    cfg, ctx, params = _build(sv)
+    toks = np.array(jax.random.randint(
+        jax.random.key(4), (16,), 0, cfg.vocab_size))
+    mk = lambda: [Request(req=0, tokens=toks.copy(), gen_len=12),  # noqa: E731
+                  Request(req=1, tokens=toks.copy(), gen_len=10)]
+
+    conservative = ServingEngine(cfg, ctx, params, sv)
+    for r in mk():
+        conservative.submit(r)
+    _drive(conservative)
+    assert conservative.evictions == 0
+    assert conservative.prefix_hits >= 1      # serialized follower still hits
+
+    optimistic = ServingEngine(cfg, ctx, params,
+                               dataclasses.replace(sv, overcommit=2.0))
+    for r in mk():
+        optimistic.submit(r)
+    _drive(optimistic)
+    assert optimistic.evictions > 0
+    assert optimistic.prefix_hits >= 2        # initial admit + re-admit
+    assert len(optimistic.responses) == 2
+    assert optimistic.responses == conservative.responses
+
+
+def test_snapshot_restore_with_shared_pages():
+    """Kill-mid-stream with shared pages live: snapshots taken while
+    prefix pages carry refcount > 1 must round-trip the refcounts, the
+    prefix index and the page metadata byte-identically, and a restored
+    engine must finish with the uninterrupted run's exact responses."""
+    sv = ServeSpec(batch=4, prompt_len=32, gen=6, requests=6,
+                   page_budget=16, reduced=True, shared_prefix_frac=0.9)
+    cfg, ctx, params = _build(sv)
+    golden = ServingEngine(cfg, ctx, params, sv)
+    for r in synthesize_requests(cfg, sv, seed=0, ragged=golden.ragged):
+        golden.submit(r)
+    snaps = _drive(golden, snap_at=(2, 4))
+    assert len(golden.responses) == sv.requests
+    assert golden.prefix_hits > 0 and golden.cow_copies > 0   # 29-token share
+    assert any(c > 1 for c in snaps[2]["refcount"])           # sharing live
+
+    for k, snap in snaps.items():
+        eng = ServingEngine(cfg, ctx, params, sv)
+        eng.restore(snap)
+        rt = eng.snapshot()       # restore → snapshot must be the identity
+        assert rt["refcount"] == snap["refcount"], k
+        assert rt["page_meta"] == snap["page_meta"], k
+        assert rt["prefix_index"] == snap["prefix_index"], k
+        _drive(eng)
+        assert eng.responses == golden.responses, f"boundary {k}"

@@ -154,6 +154,41 @@ def test_unallocated_pages_never_gathered():
         assert not bool(jnp.isnan(out).any()), "page 0 leaked into the walk"
 
 
+def test_aliased_prefix_pages_match_dealiased_oracle():
+    """Prefix caching aliases ONE physical page into many rows' tables.
+    Every decode walk reads K/V pages without mutation, so rows sharing
+    physical prefix pages must produce bitwise the same output as rows
+    reading private de-aliased copies of those pages — for the gather
+    reference, the scan fallback, and the Pallas kernel (interpret)."""
+    from repro.kernels.paged_attention import paged_decode_attention
+
+    B, K, hd, ps, pps = 3, 2, 16, 8, 5
+    q, kp, vp, _ = _pool(B, K, hd, ps, pps, pool=8)
+    # pages 0,1 are the shared prefix in every row; private tails differ
+    aliased = jnp.asarray([[0, 1, 2, 3, -1],
+                           [0, 1, 4, -1, -1],
+                           [0, 1, 5, 6, 7]], jnp.int32)
+    # oracle pool: rows 1 and 2 get their own verbatim copies at 8..11
+    kp2 = jnp.concatenate([kp, kp[jnp.asarray([0, 1, 0, 1])]], axis=0)
+    vp2 = jnp.concatenate([vp, vp[jnp.asarray([0, 1, 0, 1])]], axis=0)
+    dealiased = jnp.asarray([[0, 1, 2, 3, -1],
+                             [8, 9, 4, -1, -1],
+                             [10, 11, 5, 6, 7]], jnp.int32)
+    pos = jnp.asarray([27, 20, 39], jnp.int32)
+    kw = dict(scale=hd ** -0.5)
+
+    for fn in (
+        lambda k_, v_, t: decode_attention_paged(q, k_, v_, t, pos, **kw),
+        lambda k_, v_, t: paged_decode_jnp(
+            q.reshape(B, K, 2, hd), k_, v_, t, pos, **kw),
+        lambda k_, v_, t: paged_decode_attention(
+            q.reshape(B, K, 2, hd), k_, v_, t, pos, interpret=True, **kw),
+    ):
+        shared = fn(kp, vp, aliased)
+        oracle = fn(kp2, vp2, dealiased)
+        np.testing.assert_array_equal(np.asarray(shared), np.asarray(oracle))
+
+
 # ---------------------------------------------------------------------------
 # Ragged prefill
 # ---------------------------------------------------------------------------

@@ -3,10 +3,10 @@
 
 PY ?= python
 
-.PHONY: verify lint serve-smoke bench-smoke prefix-cache-smoke \
-	platform-serve-smoke dryrun
+.PHONY: verify lint staticcheck serve-smoke bench-smoke \
+	prefix-cache-smoke platform-serve-smoke dryrun
 
-verify: lint platform-serve-smoke prefix-cache-smoke
+verify: lint staticcheck platform-serve-smoke prefix-cache-smoke
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 # ruff is available in CI; locally the lint step degrades gracefully
@@ -16,6 +16,13 @@ lint:
 	else \
 		echo "ruff not installed; skipping lint"; \
 	fi
+
+# Dependability static analysis: AST rules (SC1xx) + semantic checkers
+# (sharding / kernel layouts / snapshot drift, SC2xx).  --check-baseline
+# makes the checked-in baseline shrink-only (fixed findings must be
+# removed from it).  See README §Static dependability checks.
+staticcheck:
+	PYTHONPATH=src $(PY) -m repro.staticcheck src --check-baseline
 
 serve-smoke:
 	PYTHONPATH=src $(PY) -m repro.launch.serve --reduced --batch 2 \

@@ -39,7 +39,6 @@ def _bare_loop(step, state, data, n):
 def _platform_loop(step, state, data, n, *, n_learners, platform, vol, ck):
     """The real work the helper containers add around each step."""
     sim = platform.sim
-    results = None
     for i in range(n):
         state, m = step(state, data.batch_at(i))
         # heartbeat + progress for each learner shard (controller input)
@@ -49,7 +48,7 @@ def _platform_loop(step, state, data, n, *, n_learners, platform, vol, ck):
             vol.append("log/0", f"step {i} loss {float(m['loss']):.4f}")
         # controller -> ETCD status propagation (raft quorum traffic)
         def put(j=0, i=i):
-            ok = yield from platform.statestore.put(
+            yield from platform.statestore.put(
                 f"status/bench/learner/{j}", {"state": "RUNNING", "step": i})
         sim.spawn(put())
         sim.run_for(0.2)

@@ -11,7 +11,6 @@ Output rows: component,recover_s_min,recover_s_max,paper_range
 """
 from __future__ import annotations
 
-import statistics
 import time
 
 import jax

@@ -19,7 +19,6 @@ Design notes
 from __future__ import annotations
 
 import dataclasses
-import math
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 

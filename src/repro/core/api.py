@@ -27,7 +27,6 @@ import itertools
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple, Union
 
-from repro.core.cluster import RpcError
 from repro.core.jobspec import JobSpec
 from repro.core.manifest import JobManifest
 from repro.core.metadata import Unavailable

@@ -16,7 +16,6 @@ state dicts of simulated learners alike.
 """
 from __future__ import annotations
 
-import json
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np

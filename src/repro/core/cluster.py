@@ -30,6 +30,13 @@ class RpcError(Exception):
     """Target service has no live endpoint (connection refused)."""
 
 
+class Unschedulable(Exception):
+    """No node can host the pod right now — placement retries, k8s-style.
+    Lives here (not in ``scheduler``) so ``_try_place`` can catch exactly
+    this type instead of a broad ``except Exception`` that would also
+    swallow scheduler bugs; ``scheduler`` re-exports it."""
+
+
 @dataclass
 class ContainerSpec:
     name: str
@@ -281,7 +288,7 @@ class Cluster:
             return
         try:
             node = self._place(pod.spec)
-        except Exception:
+        except Unschedulable:
             self.sim.schedule(3.0, self._try_place, pod)   # stay PENDING
             return
         pod.node = node
@@ -295,7 +302,7 @@ class Cluster:
         for n in self.nodes:
             if n.alive and n.gpus_free() >= spec.gpus:
                 return n
-        raise RuntimeError(f"unschedulable pod {spec.name}")
+        raise Unschedulable(f"unschedulable pod {spec.name}")
 
     def _pod_done(self, pod: Pod) -> None:
         if pod.node is not None and pod in pod.node.pods:

@@ -289,7 +289,6 @@ def _monitor_gang(platform, job_id: str, spec: JobSpec, ss, store,
                   update_job, world: int):
     """Generic gang monitor for serve/dryrun kinds: halt, restart budget,
     volume-exit completion, progress surfaced into the job document."""
-    sim = platform.sim
     vol = platform.volumes.get(f"vol-{job_id}")
     failures = 0
     seen_restarts = [0] * world

@@ -9,7 +9,7 @@ of learners (stale heartbeats).
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Dict
 
 from repro.core.jobspec import JobSpec
 
@@ -105,13 +105,12 @@ def make_log_collector_proc(platform, job_id: str, spec: JobSpec):
                 lines = vol.read(path, [])
                 n0 = shipped.get(path, 0)
                 if len(lines) > n0:
-                    # append-only shipping: logs survive learner crashes
-                    existing = b""
+                    # append-only shipping: logs survive learner crashes,
+                    # and the blob grows in place — get()+put() here wrote
+                    # O(n²) bytes over a job's lifetime
                     key = f"cos/{job_id}/logs/{path.split('/', 1)[1]}"
-                    if store.exists(key):
-                        existing = store.get(key)
                     new = "\n".join(lines[n0:]).encode()
-                    store.put(key, existing + new + b"\n")
+                    store.append(key, new + b"\n")
                     shipped[path] = len(lines)
             if done:
                 return 0

@@ -17,7 +17,7 @@ continuity is exercised end-to-end in examples/fault_tolerance.py.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Optional
 
 from repro.core.checkpoint import CheckpointManager
 from repro.core.jobspec import JobSpec
@@ -80,7 +80,6 @@ def make_learner_proc(platform, job_id: str, spec: JobSpec, idx: int):
         # -- restore ---------------------------------------------------------
         yield sim.rng.uniform(*RESTORE_TIME)
         step = 0
-        rollback = vol.read("rollback_to")
         group_steps = [vol.read(f"progress/{j}", {"step": 0})["step"]
                        for j in range(spec.learners)]
         if spec.recovery_mode == "rejoin" and \

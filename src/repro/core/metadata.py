@@ -13,7 +13,7 @@ fully present or absent (torn writes are discarded on recovery).
 from __future__ import annotations
 
 import copy
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 
 class Unavailable(Exception):

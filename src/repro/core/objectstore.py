@@ -94,7 +94,9 @@ class ObjectStore:
             if digest != wrapper["sha256"]:
                 return None
             return body
-        except Exception:
+        except (ValueError, KeyError, TypeError, UnicodeDecodeError):
+            # the corruption modes of a torn/garbage manifest: bad UTF-8,
+            # bad JSON (ValueError), missing wrapper keys, non-dict wrapper
             return None
 
     def verify(self, path: str, sha256: str) -> bool:

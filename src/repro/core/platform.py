@@ -19,7 +19,7 @@ from repro.core.cluster import Cluster, ContainerSpec, Deployment, PodSpec
 from repro.core.jobspec import FrameworkRegistry, JobSpec
 from repro.core.lcm import make_lcm_proc
 from repro.core.manifest import JobManifest
-from repro.core.metadata import MetadataStore
+from repro.core.metadata import MetadataStore, Unavailable
 from repro.core.objectstore import ObjectStore
 from repro.core.scheduler import Scheduler
 from repro.core.sim import Sim
@@ -90,8 +90,8 @@ class DLaaSPlatform:
             self.run(tick)
             try:
                 doc = self.metadata.get("jobs", job_id)
-            except Exception:
-                continue
+            except Unavailable:
+                continue            # store outage window: poll again
             if doc and doc["state"] in ("COMPLETED", "FAILED", "HALTED"):
                 return doc["state"]
         return "TIMEOUT"

@@ -6,14 +6,10 @@ fragmentation; spread across nodes is available for fault-domain diversity.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
-
-from repro.core.cluster import Cluster, Node, PodSpec
-from repro.core.tenancy import TenancyManager, QuotaExceeded
-
-
-class Unschedulable(Exception):
-    pass
+# Unschedulable is defined next to the retry loop that catches it and
+# re-exported here for its historical import path.
+from repro.core.cluster import Cluster, Node, PodSpec, Unschedulable
+from repro.core.tenancy import TenancyManager
 
 
 class Scheduler:

@@ -10,7 +10,7 @@ platform processes block in virtual time while Raft replicates.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Generator, List, Optional
+from typing import Any, Dict, Generator, Optional
 
 from repro.core.raft import LEADER, RaftNode
 from repro.core.sim import Sim

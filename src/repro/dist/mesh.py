@@ -12,7 +12,7 @@ table lists alternatives for both (absent axis names auto-drop):
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence
 
 import jax
 from jax.sharding import Mesh

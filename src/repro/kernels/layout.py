@@ -1,0 +1,58 @@
+"""Declarative Pallas grid layouts — one source of truth per kernel.
+
+Each kernel module exposes a ``*_layout(...)`` function returning a
+:class:`KernelLayout`: the grid, every operand's (shape, block,
+index_map), the outputs, the scratch allocations, and the dimension
+semantics.  The kernel's ``pallas_call`` is built *from* the layout, and
+``repro.staticcheck.kernel_check`` abstractly evaluates the very same
+index maps over every grid point — so the static checker can prove
+in-bounds blocks, exactly-once output coverage, page-hole remapping, and
+scratch-dtype coherence for exactly the code that runs, with no
+possibility of checker/kernel drift.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, List, Tuple
+
+
+@dataclass(frozen=True)
+class SpecDesc:
+    """One operand: full array shape, block shape, block index map."""
+
+    name: str
+    shape: Tuple[int, ...]
+    block: Tuple[int, ...]
+    index_map: Callable[..., Tuple[int, ...]]
+
+
+@dataclass(frozen=True)
+class KernelLayout:
+    """Complete grid description of one ``pallas_call``."""
+
+    name: str
+    grid: Tuple[int, ...]
+    in_specs: Tuple[SpecDesc, ...]
+    out_specs: Tuple[SpecDesc, ...]
+    scratch: Tuple[Tuple[Tuple[int, ...], Any], ...]  # (shape, dtype)
+    dimension_semantics: Tuple[str, ...]
+    num_scalar_prefetch: int = 0
+
+    # -- pallas_call construction ------------------------------------------
+    def block_specs(self) -> List[Any]:
+        from jax.experimental import pallas as pl
+        return [pl.BlockSpec(s.block, s.index_map) for s in self.in_specs]
+
+    def out_block_specs(self) -> List[Any]:
+        from jax.experimental import pallas as pl
+        return [pl.BlockSpec(s.block, s.index_map) for s in self.out_specs]
+
+    def scratch_shapes(self) -> List[Any]:
+        import jax.experimental.pallas.tpu as pltpu
+        return [pltpu.VMEM(shape, dtype) for shape, dtype in self.scratch]
+
+    def out_shape_structs(self, dtypes) -> List[Any]:
+        import jax
+        assert len(dtypes) == len(self.out_specs), (dtypes, self.out_specs)
+        return [jax.ShapeDtypeStruct(s.shape, dt)
+                for s, dt in zip(self.out_specs, dtypes)]

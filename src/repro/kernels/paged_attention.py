@@ -58,6 +58,7 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels.layout import KernelLayout, SpecDesc
 
 NEG_INF = -2.0e38
 
@@ -182,6 +183,62 @@ def _page_block(b, i, pt_ref, pq_ref, ps: int):
     return jnp.maximum(entry, 0)
 
 
+def paged_layout(B: int, K: int, G: int, hd: int, ps: int, pps: int,
+                 n_pool: int, *, grouped: bool) -> KernelLayout:
+    """Grid layout of the flash-decode kernel (both variants).  The
+    ``pallas_call`` below is built from this; ``staticcheck.kernel_check``
+    abstractly evaluates the same index maps over adversarial page
+    tables.  Page-table and position operands are scalar-prefetched and
+    therefore not listed as blocked inputs."""
+    if grouped:
+        def kv_map_g(b, i, pt, pq):
+            return (_page_block(b, i, pt, pq, ps), 0, 0, 0)
+
+        def q_map_g(b, i, pt, pq):
+            return (b, 0, 0, 0)
+
+        return KernelLayout(
+            name="paged_decode_grouped",
+            grid=(B, pps),
+            num_scalar_prefetch=2,
+            in_specs=(
+                SpecDesc("q", (B, K, G, hd), (1, K, G, hd), q_map_g),
+                SpecDesc("k_pages", (n_pool, K, ps, hd), (1, K, ps, hd),
+                         kv_map_g),
+                SpecDesc("v_pages", (n_pool, K, ps, hd), (1, K, ps, hd),
+                         kv_map_g),
+            ),
+            out_specs=(
+                SpecDesc("o", (B, K, G, hd), (1, K, G, hd), q_map_g),),
+            scratch=(((K * G, 1), jnp.float32),
+                     ((K * G, 1), jnp.float32),
+                     ((K * G, hd), jnp.float32)),
+            dimension_semantics=("parallel", "arbitrary"),
+        )
+
+    def kv_map(b, h, i, pt, pq):
+        return (_page_block(b, i, pt, pq, ps), h, 0, 0)
+
+    def q_map(b, h, i, pt, pq):
+        return (b, h, 0, 0)
+
+    return KernelLayout(
+        name="paged_decode",
+        grid=(B, K, pps),
+        num_scalar_prefetch=2,
+        in_specs=(
+            SpecDesc("q", (B, K, G, hd), (1, 1, G, hd), q_map),
+            SpecDesc("k_pages", (n_pool, K, ps, hd), (1, 1, ps, hd), kv_map),
+            SpecDesc("v_pages", (n_pool, K, ps, hd), (1, 1, ps, hd), kv_map),
+        ),
+        out_specs=(SpecDesc("o", (B, K, G, hd), (1, 1, G, hd), q_map),),
+        scratch=(((G, 1), jnp.float32),
+                 ((G, 1), jnp.float32),
+                 ((G, hd), jnp.float32)),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+    )
+
+
 def paged_decode_attention(
     q: jax.Array,            # (B, K, G, hd)
     k_pages: jax.Array,      # (P, K, ps, hd)
@@ -202,66 +259,30 @@ def paged_decode_attention(
     # K·G q heads into one call per page instead (see _decode_kernel_grouped)
     if grouped is None:
         grouped = G <= 4
+    layout = paged_layout(B, K, G, hd, ps, pps, k_pages.shape[0],
+                          grouped=grouped)
     if grouped:
         kernel = functools.partial(
             _decode_kernel_grouped, scale=scale, logit_cap=logit_cap,
             ps=ps, n_pages=pps, K=K, G=G)
-        def kv_map_g(b, i, pt, pq):
-            return (_page_block(b, i, pt, pq, ps), 0, 0, 0)
-
-        grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=(B, pps),
-            in_specs=[
-                pl.BlockSpec((1, K, G, hd), lambda b, i, pt, pq: (b, 0, 0, 0)),
-                pl.BlockSpec((1, K, ps, hd), kv_map_g),
-                pl.BlockSpec((1, K, ps, hd), kv_map_g),
-            ],
-            out_specs=pl.BlockSpec((1, K, G, hd),
-                                   lambda b, i, pt, pq: (b, 0, 0, 0)),
-            scratch_shapes=[
-                pltpu.VMEM((K * G, 1), jnp.float32),
-                pltpu.VMEM((K * G, 1), jnp.float32),
-                pltpu.VMEM((K * G, hd), jnp.float32),
-            ],
-        )
-        return pl.pallas_call(
-            kernel,
-            grid_spec=grid_spec,
-            out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
-            compiler_params=_CompilerParams(
-                dimension_semantics=("parallel", "arbitrary")),
-            interpret=interpret,
-        )(page_table.astype(jnp.int32), pos_q.astype(jnp.int32), q,
-          k_pages, v_pages)
-
-    kernel = functools.partial(
-        _decode_kernel, scale=scale, logit_cap=logit_cap, ps=ps, n_pages=pps)
-    def kv_map(b, h, i, pt, pq):
-        return (_page_block(b, i, pt, pq, ps), h, 0, 0)
+    else:
+        kernel = functools.partial(
+            _decode_kernel, scale=scale, logit_cap=logit_cap, ps=ps,
+            n_pages=pps)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(B, K, pps),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, i, pt, pq: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, ps, hd), kv_map),
-            pl.BlockSpec((1, 1, ps, hd), kv_map),
-        ],
-        out_specs=pl.BlockSpec((1, 1, G, hd),
-                               lambda b, h, i, pt, pq: (b, h, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, hd), jnp.float32),
-        ],
+        num_scalar_prefetch=layout.num_scalar_prefetch,
+        grid=layout.grid,
+        in_specs=layout.block_specs(),
+        out_specs=layout.out_block_specs()[0],
+        scratch_shapes=layout.scratch_shapes(),
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        out_shape=layout.out_shape_structs([q.dtype])[0],
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=layout.dimension_semantics),
         interpret=interpret,
     )(page_table.astype(jnp.int32), pos_q.astype(jnp.int32), q,
       k_pages, v_pages)

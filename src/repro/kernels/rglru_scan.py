@@ -16,9 +16,31 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels.layout import KernelLayout, SpecDesc
+
+
+def rglru_layout(B: int, S: int, R: int, t_blk: int,
+                 r_blk: int) -> KernelLayout:
+    """Grid layout of :func:`rglru_scan` — the single source of truth the
+    pallas_call is built from and ``staticcheck`` abstractly checks."""
+    seq_map = lambda bi, ri, ti: (bi, ti, ri)
+    h0_map = lambda bi, ri, ti: (bi, ri)
+    return KernelLayout(
+        name="rglru_scan",
+        grid=(B, R // r_blk, S // t_blk),
+        in_specs=(
+            SpecDesc("log_a", (B, S, R), (1, t_blk, r_blk), seq_map),
+            SpecDesc("b", (B, S, R), (1, t_blk, r_blk), seq_map),
+            SpecDesc("h0", (B, R), (1, r_blk), h0_map),
+        ),
+        out_specs=(
+            SpecDesc("o", (B, S, R), (1, t_blk, r_blk), seq_map),
+        ),
+        scratch=(((1, r_blk), jnp.float32),),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+    )
 
 
 def _rglru_kernel(la_ref, b_ref, h0_ref, o_ref, carry, *, t_blk: int):
@@ -54,19 +76,15 @@ def rglru_scan(
     assert S % t_blk == 0 and R % r_blk == 0, (S, t_blk, R, r_blk)
 
     kernel = functools.partial(_rglru_kernel, t_blk=t_blk)
+    layout = rglru_layout(B, S, R, t_blk, r_blk)
     return pl.pallas_call(
         kernel,
-        grid=(B, R // r_blk, S // t_blk),
-        in_specs=[
-            pl.BlockSpec((1, t_blk, r_blk), lambda bi, ri, ti: (bi, ti, ri)),
-            pl.BlockSpec((1, t_blk, r_blk), lambda bi, ri, ti: (bi, ti, ri)),
-            pl.BlockSpec((1, r_blk), lambda bi, ri, ti: (bi, ri)),
-        ],
-        out_specs=pl.BlockSpec((1, t_blk, r_blk),
-                               lambda bi, ri, ti: (bi, ti, ri)),
-        out_shape=jax.ShapeDtypeStruct((B, S, R), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((1, r_blk), jnp.float32)],
+        grid=layout.grid,
+        in_specs=layout.block_specs(),
+        out_specs=layout.out_block_specs()[0],
+        out_shape=layout.out_shape_structs([jnp.float32])[0],
+        scratch_shapes=layout.scratch_shapes(),
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=layout.dimension_semantics),
         interpret=interpret,
     )(log_a, b, h0)

@@ -16,9 +16,34 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels.layout import KernelLayout, SpecDesc
+
+
+def wkv_layout(BH: int, S: int, N: int, chunk: int) -> KernelLayout:
+    """Grid layout of :func:`wkv6` — the single source of truth the
+    pallas_call is built from and ``staticcheck`` abstractly checks."""
+    seq_map = lambda bh, ci: (bh, ci, 0)
+    head_map = lambda bh, ci: (bh, 0, 0)
+    return KernelLayout(
+        name="rwkv6_wkv",
+        grid=(BH, S // chunk),
+        in_specs=(
+            SpecDesc("r", (BH, S, N), (1, chunk, N), seq_map),
+            SpecDesc("k", (BH, S, N), (1, chunk, N), seq_map),
+            SpecDesc("v", (BH, S, N), (1, chunk, N), seq_map),
+            SpecDesc("lw", (BH, S, N), (1, chunk, N), seq_map),
+            SpecDesc("u", (BH, 1, N), (1, 1, N), head_map),
+            SpecDesc("s0", (BH, N, N), (1, N, N), head_map),
+        ),
+        out_specs=(
+            SpecDesc("o", (BH, S, N), (1, chunk, N), seq_map),
+            SpecDesc("s_out", (BH, N, N), (1, N, N), head_map),
+        ),
+        scratch=(((N, N), jnp.float32),),
+        dimension_semantics=("parallel", "arbitrary"),
+    )
 
 
 def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
@@ -79,28 +104,16 @@ def wkv6(
     n_chunks = S // chunk
 
     kernel = functools.partial(_wkv_kernel, L=chunk, n_chunks=n_chunks)
+    layout = wkv_layout(BH, S, N, chunk)
     o, s_fin = pl.pallas_call(
         kernel,
-        grid=(BH, n_chunks),
-        in_specs=[
-            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
-            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
-            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
-            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
-            pl.BlockSpec((1, 1, N), lambda bh, ci: (bh, 0, 0)),
-            pl.BlockSpec((1, N, N), lambda bh, ci: (bh, 0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
-            pl.BlockSpec((1, N, N), lambda bh, ci: (bh, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((BH, S, N), r.dtype),
-            jax.ShapeDtypeStruct((BH, N, N), jnp.float32),
-        ],
-        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        grid=layout.grid,
+        in_specs=layout.block_specs(),
+        out_specs=layout.out_block_specs(),
+        out_shape=layout.out_shape_structs([r.dtype, jnp.float32]),
+        scratch_shapes=layout.scratch_shapes(),
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+            dimension_semantics=layout.dimension_semantics),
         interpret=interpret,
     )(r, k, v, lw, u, s0)
     return o, s_fin

@@ -102,14 +102,14 @@ def run_analysis(arch: str, shape_name: str, multi_pod: bool) -> dict:
     P = len(cfg.block_pattern)
     G = (cfg.num_layers - cfg.first_k_dense) // P
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     c2 = _measure(arch, shape_name, multi_pod, _variant_cfg(cfg, 2), run1)
     c3 = _measure(arch, shape_name, multi_pod, _variant_cfg(cfg, 3), run1)
     full = _extrapolate(c2, c3, G)
     return {
         "ok": True, **meta,
         "n_groups": G,
-        "seconds": round(time.time() - t0, 1),
+        "seconds": round(time.perf_counter() - t0, 1),
         "g2": c2, "g3": c3,
         "extrapolated": full,
     }

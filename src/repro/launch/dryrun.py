@@ -179,14 +179,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
     from repro.configs import get_config
     from repro.models.model import count_params
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered, meta = build_lowered(arch, shape_name, multi_pod)
     if lowered is None:
         return {"ok": True, **meta}
-    t_lower = time.time() - t0
+    t_lower = time.perf_counter() - t0
 
     compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+    t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     mem_rec = {}

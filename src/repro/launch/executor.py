@@ -77,14 +77,14 @@ def _run_train(spec: JobSpec) -> int:
     n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
     print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M "
           f"mesh={mesh.devices.shape} devices={mesh.devices.size}")
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(t.total_steps):
         state, m = step(state, data.batch_at(i))
         if i % t.log_every == 0 or i == t.total_steps - 1:
             print(f"  step {i:5d}  loss {float(m['loss']):.4f}  "
                   f"gnorm {float(m['grad_norm']):.3f}  "
                   f"lr {float(m['lr']):.2e}")
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     tok = t.total_steps * t.global_batch * t.seq_len
     print(f"[train] {t.total_steps} steps in {dt:.1f}s "
           f"({tok/dt:.0f} tok/s incl. compile)")
@@ -115,19 +115,19 @@ def run_lockstep(cfg, ctx, params, sv: ServeSpec) -> int:
     prefill, decode = make_serve_steps(cfg, ctx)
     cache = init_cache(cfg, B, max_len, src_len=src_len)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, cache = prefill(params, batch, cache)
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    t_prefill = time.time() - t0
+    t_prefill = time.perf_counter() - t0
 
     out = [tok]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for t in range(P, P + G - 1):
         logits, cache = decode(params, {"tokens": tok}, cache, jnp.int32(t))
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
         out.append(tok)
     jax.block_until_ready(tok)
-    t_decode = time.time() - t0
+    t_decode = time.perf_counter() - t0
 
     gen = jnp.concatenate(out, axis=1)
     print(f"[serve] arch={cfg.name} layout={cfg.cache_layout} "
@@ -153,13 +153,13 @@ def run_continuous(cfg, ctx, params, sv: ServeSpec, seed: int = 0) -> int:
     except ValueError as e:          # CLI contract: bad flags exit nonzero
         raise SystemExit(str(e)) from e
     n_req = sv.requests
-    t0 = time.time()
+    t0 = time.perf_counter()
     for request in synthesize_requests(cfg, sv, seed, engine.ragged):
         engine.submit(request)
     engine.run()
 
     jax.block_until_ready(engine.cache)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"[serve/continuous] arch={cfg.name} requests={n_req} "
           f"slots={engine.B} prompt<= {sv.prompt_len} gen<= {sv.gen} "
           f"page_size={engine.ps} "

@@ -52,7 +52,7 @@ def measure(arch, shape, overrides, mb=None, csw=False, multi_pod=False):
             constrain_scan_weights=csw)
 
     # memory from the FULL config compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered, meta = _build()
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
@@ -87,7 +87,7 @@ def measure(arch, shape, overrides, mb=None, csw=False, multi_pod=False):
         "collectives_GB": {k: round(v["wire_bytes"] / 1e9, 2)
                            for k, v in ex["collectives"].items()},
         "flops_dev": ex["flops"],
-        "seconds": round(time.time() - t0, 1),
+        "seconds": round(time.perf_counter() - t0, 1),
     }
     return rec
 

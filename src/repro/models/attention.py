@@ -598,7 +598,6 @@ def mla_attention(
     cache: Optional[Cache],
     pos: jax.Array,
 ) -> Tuple[jax.Array, Optional[Cache]]:
-    B = x.shape[0]
     H = cfg.num_heads
     nope, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     lora = cfg.kv_lora_rank

@@ -1,8 +1,8 @@
 """Shared numeric primitives + the forward-pass context object."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

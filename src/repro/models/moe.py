@@ -30,7 +30,6 @@ def moe_ffn(
 ) -> Tuple[jax.Array, jax.Array]:
     B, S, D = x.shape
     E, k = cfg.num_experts, cfg.num_experts_per_tok
-    Fe = cfg.moe_d_ff
     T = B * S
     Sg = min(cfg.moe_group_size or MOE_GROUP_SIZE, T)
     assert T % Sg == 0, f"token count {T} not divisible by group size {Sg}"

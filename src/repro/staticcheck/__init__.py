@@ -1,0 +1,42 @@
+"""``repro.staticcheck`` — the dependability static-analysis pass.
+
+Three layers (see README §Static dependability checks):
+
+1. an AST lint engine (``engine`` + ``rules``): a rule registry, a file
+   walker with per-line ``# staticcheck: ignore[RULE]`` suppressions, and
+   ~6 rules encoding the invariant-violation classes previous PRs fixed
+   one at a time (SystemExit escaping pod sandboxes, salted builtin
+   ``hash()`` in persisted state, ObjectStore read-modify-write loops,
+   module-global durable counters, wall-clock in sim-driven code, broad
+   exception swallows in pod loops);
+2. semantic cross-file checkers that verify platform invariants without
+   executing a job: ``sharding_check`` (every config × both production
+   meshes against the ``dist.sharding`` rule table), ``kernel_check``
+   (abstract evaluation of Pallas BlockSpec index maps over symbolic grid
+   points), ``drift_check`` (ServingEngine snapshot/restore/journal ↔
+   SeqRecord field coherence);
+3. a checked-in baseline (``staticcheck_baseline.json``) for grandfathered
+   findings — empty for ``core/`` and ``launch/`` by construction.
+
+CLI: ``python -m repro.staticcheck src/`` exits nonzero on any finding not
+in the baseline; wired into ``make verify`` and CI.
+"""
+from repro.staticcheck.engine import (
+    Baseline,
+    Finding,
+    Rule,
+    all_rules,
+    render_json,
+    render_text,
+    run_files,
+)
+
+__all__ = [
+    "Baseline",
+    "Finding",
+    "Rule",
+    "all_rules",
+    "render_json",
+    "render_text",
+    "run_files",
+]

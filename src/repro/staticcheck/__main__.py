@@ -1,0 +1,97 @@
+"""CLI: ``python -m repro.staticcheck [paths...]``.
+
+Runs the AST rules over the given paths (default ``src/``) plus the
+semantic cross-file checkers, subtracts the checked-in baseline, and
+exits nonzero on anything new.  Exit codes: 0 clean, 1 findings, 2 the
+checker itself failed.
+
+Flags:
+  --json             machine-readable findings
+  --baseline PATH    baseline file (default: staticcheck_baseline.json
+                     next to the repo's pyproject, or cwd)
+  --write-baseline   grandfather all current findings into the baseline
+  --check-baseline   also fail if baseline entries went stale (the
+                     burn-down ratchet: fixed findings must be removed)
+  --ast-only         skip the semantic checkers (fast pre-commit loop)
+  --semantic-only    skip the AST rules
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List
+
+from repro.staticcheck.engine import (
+    Baseline, Finding, render_json, render_text, run_files)
+
+
+def _default_baseline() -> Path:
+    here = Path.cwd()
+    for d in (here, *here.parents):
+        if (d / "pyproject.toml").exists():
+            return d / "staticcheck_baseline.json"
+    return here / "staticcheck_baseline.json"
+
+
+def semantic_findings() -> List[Finding]:
+    from repro.staticcheck import drift_check, kernel_check, sharding_check
+    out: List[Finding] = []
+    out.extend(sharding_check.check())
+    out.extend(kernel_check.check())
+    out.extend(drift_check.check())
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.staticcheck")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to scan (default: src/)")
+    ap.add_argument("--json", action="store_true")
+    ap.add_argument("--baseline", type=Path, default=None)
+    ap.add_argument("--write-baseline", action="store_true")
+    ap.add_argument("--check-baseline", action="store_true")
+    ap.add_argument("--ast-only", action="store_true")
+    ap.add_argument("--semantic-only", action="store_true")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or ["src"]
+    findings: List[Finding] = []
+    if not args.semantic_only:
+        findings.extend(run_files(paths))
+    if not args.ast_only:
+        findings.extend(semantic_findings())
+
+    bl_path = args.baseline or _default_baseline()
+    if args.write_baseline:
+        Baseline.save(bl_path, findings)
+        print(f"wrote {len(findings)} finding(s) to {bl_path}")
+        return 0
+
+    baseline = Baseline.load(bl_path)
+    new, old = baseline.apply(findings)
+    stale = baseline.stale(findings)
+
+    if args.json:
+        print(render_json(new))
+    else:
+        if new:
+            print(render_text(new))
+        if old:
+            print(f"({len(old)} grandfathered finding(s) in baseline)")
+        if not new:
+            print(f"staticcheck: clean "
+                  f"({len(findings)} finding(s), all baselined)"
+                  if findings else "staticcheck: clean")
+    rc = 1 if new else 0
+    if args.check_baseline and stale:
+        print(f"baseline ratchet: {len(stale)} entr(ies) no longer fire "
+              "and must be removed:")
+        for fp in stale:
+            print(f"  {fp}")
+        rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

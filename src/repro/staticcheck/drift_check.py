@@ -1,0 +1,217 @@
+"""SC203 — snapshot/restore/journal field-drift checker.
+
+``ServingEngine.snapshot()`` / ``restore()`` and the server's snapshot
+envelope evolve together; a field added to one side but not the other
+silently loses state across a pod restart (exactly the failure the
+resumable-engine PR guards with runtime tests — this checker catches the
+drift at lint time, before any engine is built).  All checks are AST
+reflection over ``launch/engine.py`` and ``core/server.py``:
+
+* every key ``snapshot`` emits is read back by ``restore`` (keys proven
+  snapshot-only — today ``journal_len``, asserted by the engine tests —
+  live on an explicit allowlist), and restore reads nothing snapshot
+  doesn't emit;
+* the per-slot ``rec_doc`` document carries every ``SeqRecord`` field
+  (the ``request`` object is flattened to ``req``/``tokens``/``gen_len``)
+  and restore's ``SeqRecord`` reconstruction reads exactly those keys;
+* the ``stats`` sub-dict round-trips key-for-key;
+* every journal event appended (engine ``self.journal.append`` and the
+  server's volume journal) carries at least ``ev`` and ``req`` — replay
+  dispatches on those two;
+* every key the server adds to the snapshot envelope (``snap_doc[...] =``)
+  is read somewhere (server or engine restore).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Set
+
+from repro.staticcheck.engine import Finding
+
+RULE_ID = "SC203"
+ENGINE = "src/repro/launch/engine.py"
+SERVER = "src/repro/core/server.py"
+
+#: snapshot keys intentionally not read by restore (each must be asserted
+#: snapshot-only by a runtime test; see tests/test_engine.py).
+SNAPSHOT_ONLY: Set[str] = {"journal_len"}
+#: SeqRecord.request is flattened into these rec_doc keys.
+REQUEST_KEYS: Set[str] = {"req", "tokens", "gen_len"}
+
+
+def _const_keys(d: ast.Dict) -> Set[str]:
+    return {k.value for k in d.keys
+            if isinstance(k, ast.Constant) and isinstance(k.value, str)}
+
+
+def _sub_reads(node: ast.AST, name: str) -> Set[str]:
+    """String keys read from ``name`` via ``name["k"]`` or ``name.get("k"``."""
+    out: Set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Subscript) and isinstance(n.value, ast.Name) \
+                and n.value.id == name \
+                and isinstance(n.slice, ast.Constant) \
+                and isinstance(n.slice.value, str):
+            out.add(n.slice.value)
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute) \
+                and n.func.attr == "get" \
+                and isinstance(n.func.value, ast.Name) \
+                and n.func.value.id == name and n.args \
+                and isinstance(n.args[0], ast.Constant) \
+                and isinstance(n.args[0].value, str):
+            out.add(n.args[0].value)
+    return out
+
+
+def _find(tree: ast.AST, kind, name: str):
+    for n in ast.walk(tree):
+        if isinstance(n, kind) and n.name == name:
+            return n
+    return None
+
+
+def _return_dict(fn: ast.FunctionDef) -> Optional[ast.Dict]:
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Return) and isinstance(n.value, ast.Dict):
+            return n.value
+    return None
+
+
+def _parse(root: Optional[Path], rel: str):
+    """Parse ``rel`` under ``root``; with no root, resolve via the live
+    module's ``__file__`` so the checker works from any cwd."""
+    if root is not None:
+        p = root / rel
+    else:
+        import importlib
+        mod = "repro." + rel.split("repro/", 1)[1][:-3].replace("/", ".")
+        p = Path(importlib.import_module(mod).__file__)
+    return ast.parse(p.read_text(), filename=rel) if p.exists() else None
+
+
+def check(root: Optional[Path] = None) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def fail(path: str, node, msg: str) -> None:
+        findings.append(
+            Finding(RULE_ID, path, getattr(node, "lineno", 0), msg))
+
+    eng = _parse(root, ENGINE)
+    if eng is None:
+        return [Finding(RULE_ID, ENGINE, 0, "engine.py not found under "
+                        f"{root} — drift check could not run")]
+
+    snapshot = _find(eng, ast.FunctionDef, "snapshot")
+    restore = _find(eng, ast.FunctionDef, "restore")
+    rec_doc = _find(eng, ast.FunctionDef, "rec_doc")
+    seqrec = _find(eng, ast.ClassDef, "SeqRecord")
+    if not all((snapshot, restore, rec_doc, seqrec)):
+        return [Finding(RULE_ID, ENGINE, 0,
+                        "snapshot/restore/rec_doc/SeqRecord not found — "
+                        "drift check could not run")]
+
+    # 1. top-level snapshot keys ↔ restore reads of ``snap``
+    snap_dict = _return_dict(snapshot)
+    if snap_dict is None:
+        fail(ENGINE, snapshot, "snapshot() does not return a dict literal")
+        return findings
+    snap_keys = _const_keys(snap_dict)
+    restore_reads = _sub_reads(restore, "snap")
+    for k in sorted(snap_keys - restore_reads - SNAPSHOT_ONLY):
+        fail(ENGINE, snapshot, f"snapshot emits {k!r} but restore never "
+             "reads it — state lost across pod restart")
+    for k in sorted(restore_reads - snap_keys):
+        fail(ENGINE, restore, f"restore reads snap[{k!r}] which snapshot "
+             "never emits")
+    for k in sorted(SNAPSHOT_ONLY - snap_keys):
+        fail(ENGINE, snapshot, f"SNAPSHOT_ONLY lists {k!r} but snapshot "
+             "no longer emits it — prune the allowlist")
+
+    # 2. rec_doc keys ↔ SeqRecord fields ↔ restore's doc[...] reads
+    rec_keys = set()
+    doc = _return_dict(rec_doc)
+    if doc is not None:
+        rec_keys = _const_keys(doc)
+    fields = {s.target.id for s in seqrec.body
+              if isinstance(s, ast.AnnAssign)
+              and isinstance(s.target, ast.Name)}
+    expected = (fields - {"request"}) | REQUEST_KEYS
+    for k in sorted(expected - rec_keys):
+        fail(ENGINE, rec_doc, f"SeqRecord field {k!r} missing from "
+             "rec_doc — slot state lost across restore")
+    for k in sorted(rec_keys - expected):
+        fail(ENGINE, rec_doc, f"rec_doc emits {k!r} which is not a "
+             "SeqRecord field — restore cannot place it")
+    doc_reads = _sub_reads(restore, "doc")
+    for k in sorted(rec_keys - doc_reads):
+        fail(ENGINE, restore, f"rec_doc emits {k!r} but restore never "
+             f"reads doc[{k!r}]")
+
+    # 3. stats sub-dict round-trip
+    stats_dict = None
+    for k, v in zip(snap_dict.keys, snap_dict.values):
+        if isinstance(k, ast.Constant) and k.value == "stats" \
+                and isinstance(v, ast.Dict):
+            stats_dict = v
+    if stats_dict is None:
+        fail(ENGINE, snapshot, "snapshot has no literal 'stats' dict")
+    else:
+        stats_keys = _const_keys(stats_dict)
+        st_reads = _sub_reads(restore, "st")
+        for k in sorted(stats_keys - st_reads):
+            fail(ENGINE, restore, f"stats key {k!r} never restored")
+        for k in sorted(st_reads - stats_keys):
+            fail(ENGINE, restore, f"restore reads stats key {k!r} which "
+                 "snapshot never emits")
+
+    # 4. journal events carry ev + req (replay dispatches on these)
+    def journal_dicts(tree: ast.AST, attr: str):
+        for n in ast.walk(tree):
+            if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute) \
+                    and n.func.attr == "append":
+                recv = n.func.value
+                is_journal = (isinstance(recv, ast.Attribute)
+                              and recv.attr == attr)
+                is_vol = (isinstance(recv, ast.Name) and attr == "vol"
+                          and recv.id == "vol")
+                if not (is_journal or is_vol):
+                    continue
+                for arg in n.args:
+                    if isinstance(arg, ast.Dict):
+                        yield n, arg
+
+    for path, tree, attr in ((ENGINE, eng, "journal"),):
+        for call, d in journal_dicts(tree, attr):
+            missing = {"ev", "req"} - _const_keys(d)
+            if missing:
+                fail(path, call, f"journal event missing key(s) "
+                     f"{sorted(missing)} — replay dispatches on ev/req")
+
+    # 5. server snapshot envelope: every snap_doc write is read somewhere
+    srv = _parse(root, SERVER)
+    if srv is None:
+        findings.append(Finding(RULE_ID, SERVER, 0,
+                                "server.py not found — envelope unchecked"))
+        return findings
+    writes: Dict[str, ast.AST] = {}
+    for n in ast.walk(srv):
+        if isinstance(n, ast.Assign):
+            for t in n.targets:
+                if isinstance(t, ast.Subscript) \
+                        and isinstance(t.value, ast.Name) \
+                        and t.value.id == "snap_doc" \
+                        and isinstance(t.slice, ast.Constant) \
+                        and isinstance(t.slice.value, str):
+                    writes[t.slice.value] = n
+    env_reads = _sub_reads(srv, "snap") | restore_reads
+    for k, node in sorted(writes.items()):
+        if k not in env_reads:
+            fail(SERVER, node, f"snapshot envelope key {k!r} written but "
+                 "never read — dead recovery state")
+    for call, d in journal_dicts(srv, "vol"):
+        missing = {"ev", "req"} - _const_keys(d)
+        if missing:
+            fail(SERVER, call, f"volume journal event missing key(s) "
+                 f"{sorted(missing)} — replay dispatches on ev/req")
+    return findings

@@ -1,0 +1,230 @@
+"""AST lint engine: rule registry, file walker, suppressions, baseline.
+
+A :class:`Rule` owns an id (``SC1xx`` for AST rules, ``SC2xx`` for the
+semantic checkers), a path scope, and a ``check`` over one parsed module.
+The walker parses each file once and feeds it to every in-scope rule.
+
+Suppressions are per line: a finding whose source line (or the line above
+it) carries ``# staticcheck: ignore[SC101]`` (comma-separated ids, or a
+bare ``ignore`` for all rules) is dropped.  Suppressions are for code that
+*looks* like a violation but is proven safe — real findings get fixed or,
+transitionally, grandfathered in the baseline file.
+
+The baseline (:class:`Baseline`) is a checked-in JSON multiset of finding
+fingerprints.  Fingerprints exclude the line number so unrelated edits
+don't invalidate the baseline; each baseline entry absorbs at most one
+live finding (a *second* occurrence of a grandfathered pattern is new).
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*staticcheck:\s*ignore(?:\[(?P<ids>[A-Z0-9,\s]+)\])?")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str                 # "SC101"
+    path: str                 # posix path as scanned (repo-relative)
+    line: int                 # 1-based; 0 for file-level findings
+    message: str
+
+    def fingerprint(self) -> str:
+        """Line-free identity used for baseline matching."""
+        return f"{self.rule}::{self.path}::{self.message}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+class Rule:
+    """Base class: subclasses set ``id``/``title``/``rationale``/``scopes``
+    and implement :meth:`check`.  ``scopes`` are posix path *segments* —
+    a rule applies to a file iff any scope is a substring of its posix
+    path (empty scopes = applies everywhere under the scanned roots)."""
+
+    id: str = "SC000"
+    title: str = ""
+    rationale: str = ""
+    scopes: Tuple[str, ...] = ()
+
+    def applies_to(self, posix_path: str) -> bool:
+        if not self.scopes:
+            return True
+        return any(s in posix_path for s in self.scopes)
+
+    def check(self, tree: ast.AST, lines: Sequence[str],
+              path: str) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, path: str, node: ast.AST, message: str) -> Finding:
+        return Finding(self.id, path, getattr(node, "lineno", 0), message)
+
+
+def all_rules() -> List[Rule]:
+    """The registered AST rules (semantic checkers register separately —
+    they need imports heavier than ``ast``)."""
+    from repro.staticcheck import rules as _rules
+    return [cls() for cls in _rules.RULES]
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+def suppressed_ids(line: str) -> Optional[set]:
+    """The rule ids a source line suppresses: a set of ids, the empty set
+    for a bare ``ignore`` (= all rules), or None if no marker."""
+    m = _SUPPRESS_RE.search(line)
+    if m is None:
+        return None
+    ids = m.group("ids")
+    if ids is None:
+        return set()
+    return {s.strip() for s in ids.split(",") if s.strip()}
+
+
+def is_suppressed(f: Finding, lines: Sequence[str]) -> bool:
+    """A finding is suppressed by a marker on its own line or on the line
+    directly above (for lines that have no room for a trailing comment)."""
+    for ln in (f.line, f.line - 1):
+        if 1 <= ln <= len(lines):
+            ids = suppressed_ids(lines[ln - 1])
+            if ids is not None and (not ids or f.rule in ids):
+                return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Walker
+# ---------------------------------------------------------------------------
+def iter_py_files(paths: Sequence[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            out.append(path)
+    # dedup, keep order
+    seen: set = set()
+    uniq = []
+    for f in out:
+        if f not in seen:
+            seen.add(f)
+            uniq.append(f)
+    return uniq
+
+
+def check_file(path: Path, rules: Sequence[Rule]) -> List[Finding]:
+    posix = path.as_posix()
+    applicable = [r for r in rules if r.applies_to(posix)]
+    if not applicable:
+        return []
+    try:
+        src = path.read_text()
+        tree = ast.parse(src, filename=posix)
+    except (SyntaxError, UnicodeDecodeError) as e:
+        return [Finding("SC100", posix, getattr(e, "lineno", 0) or 0,
+                        f"unparseable file: {e.__class__.__name__}")]
+    lines = src.splitlines()
+    found: List[Finding] = []
+    for rule in applicable:
+        for f in rule.check(tree, lines, posix):
+            if not is_suppressed(f, lines):
+                found.append(f)
+    return found
+
+
+def run_files(paths: Sequence[str],
+              rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+    """Run the AST rules over every ``.py`` under ``paths``."""
+    rules = list(rules) if rules is not None else all_rules()
+    findings: List[Finding] = []
+    for f in iter_py_files(paths):
+        findings.extend(check_file(f, rules))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+class Baseline:
+    """Checked-in multiset of grandfathered finding fingerprints.
+
+    ``apply`` partitions findings into (new, grandfathered); each baseline
+    entry absorbs at most one live finding.  ``stale`` reports entries
+    that no longer fire — they should be deleted, the burn-down ratchet.
+    """
+
+    def __init__(self, fingerprints: Sequence[str] = ()):
+        self.counts: Dict[str, int] = {}
+        for fp in fingerprints:
+            self.counts[fp] = self.counts.get(fp, 0) + 1
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        if not path.exists():
+            return cls()
+        doc = json.loads(path.read_text())
+        return cls(doc.get("findings", []))
+
+    @staticmethod
+    def save(path: Path, findings: Sequence[Finding]) -> None:
+        doc = {"comment": "grandfathered staticcheck findings; entries may "
+                          "only be removed (CI guards growth)",
+               "findings": sorted(f.fingerprint() for f in findings)}
+        path.write_text(json.dumps(doc, indent=2) + "\n")
+
+    def __len__(self) -> int:
+        return sum(self.counts.values())
+
+    def apply(self, findings: Sequence[Finding]
+              ) -> Tuple[List[Finding], List[Finding]]:
+        remaining = dict(self.counts)
+        new: List[Finding] = []
+        old: List[Finding] = []
+        for f in findings:
+            fp = f.fingerprint()
+            if remaining.get(fp, 0) > 0:
+                remaining[fp] -= 1
+                old.append(f)
+            else:
+                new.append(f)
+        return new, old
+
+    def stale(self, findings: Sequence[Finding]) -> List[str]:
+        live: Dict[str, int] = {}
+        for f in findings:
+            fp = f.fingerprint()
+            live[fp] = live.get(fp, 0) + 1
+        out: List[str] = []
+        for fp, n in sorted(self.counts.items()):
+            extra = n - live.get(fp, 0)
+            out.extend([fp] * max(extra, 0))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Reporters
+# ---------------------------------------------------------------------------
+def render_text(findings: Sequence[Finding]) -> str:
+    lines = [f.render() for f in sorted(
+        findings, key=lambda f: (f.path, f.line, f.rule))]
+    lines.append(f"{len(findings)} finding(s)")
+    return "\n".join(lines)
+
+
+def render_json(findings: Sequence[Finding]) -> str:
+    return json.dumps(
+        [{"rule": f.rule, "path": f.path, "line": f.line,
+          "message": f.message} for f in sorted(
+              findings, key=lambda f: (f.path, f.line, f.rule))],
+        indent=2)

@@ -1,0 +1,295 @@
+"""The dependability AST rules — each one generalizes a bug class a
+previous PR fixed by hand (ids and history in README §Static
+dependability checks).
+
+Scope convention: pod/payload code paths are everything under
+``repro/core/`` plus ``repro/launch/engine.py`` — code a platform workload
+pod executes under the sim's ``except Exception`` sandbox.  The launch
+CLIs (``train``/``serve``/``dryrun``/``perf``/``analysis``/``executor``)
+are process entry points where ``SystemExit`` is the *correct* failure
+mode, so SC101 excludes them; wall-clock (SC105) is banned across all of
+``core/`` and ``launch/`` because artifacts and journals from either tree
+feed deterministic-replay tests (monotonic interval clocks —
+``time.perf_counter``/``time.monotonic`` — stay legal).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Tuple
+
+from repro.staticcheck.engine import Finding, Rule
+
+#: Code reachable from inside a platform workload pod.
+POD_SCOPES: Tuple[str, ...] = ("repro/core/", "repro/launch/engine.py")
+#: Sim-driven + artifact-producing trees (deterministic replay).
+SIM_SCOPES: Tuple[str, ...] = ("repro/core/", "repro/launch/")
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an expression (``a.b.c`` → "a.b.c")."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+class ExitInPodRule(Rule):
+    """SC101 — no ``SystemExit``/``sys.exit``/``os._exit`` in pod code.
+
+    The sim drives pod generators under ``except Exception``; SystemExit
+    derives from BaseException, so a pod raising it escapes the sandbox
+    and kills every co-tenant job with the simulator (the PR 5 post-review
+    class: engine-constructor errors must be ValueError; the CLI maps them
+    back to SystemExit at the process boundary)."""
+
+    id = "SC101"
+    title = "SystemExit reachable from pod/payload code"
+    rationale = ("SystemExit escapes the sim's except Exception and kills "
+                 "co-tenant jobs; raise ValueError/RuntimeError instead")
+    scopes = POD_SCOPES
+
+    def check(self, tree, lines, path) -> Iterable[Finding]:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Raise) and node.exc is not None:
+                target = node.exc
+                if isinstance(target, ast.Call):
+                    target = target.func
+                if isinstance(target, ast.Name) \
+                        and target.id == "SystemExit":
+                    yield self.finding(
+                        path, node, "raise SystemExit in pod-reachable "
+                        "code; use ValueError (CLI maps it at the "
+                        "process boundary)")
+            if isinstance(node, ast.Call):
+                name = _dotted(node.func)
+                if name in ("sys.exit", "os._exit"):
+                    yield self.finding(
+                        path, node, f"{name}() in pod-reachable code; "
+                        "pods must fail their own job only")
+
+
+class BuiltinHashRule(Rule):
+    """SC102 — no builtin ``hash()`` on values that can reach persisted
+    state.  Python hashes are salted per process (PYTHONHASHSEED), so a
+    snapshot/journal/statestore entry keyed by ``hash()`` never matches
+    after a restart — the prefix index uses chained blake2b for exactly
+    this reason.  Scoped to the whole package: content addressing must be
+    process-stable everywhere."""
+
+    id = "SC102"
+    title = "builtin hash() in persistence-adjacent code"
+    rationale = ("builtin hash is salted per process; snapshots/journals "
+                 "keyed by it break across restarts — use hashlib.blake2b")
+    scopes = ("repro/",)
+
+    def check(self, tree, lines, path) -> Iterable[Finding]:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id == "hash":
+                yield self.finding(
+                    path, node, "builtin hash() is salted per process; "
+                    "use hashlib.blake2b for anything that may be "
+                    "persisted or compared across restarts")
+
+
+class ObjectStoreRMWRule(Rule):
+    """SC103 — no get+put read-modify-write on the same key.  Shipping n
+    log lines by ``put(k, get(k) + line)`` writes O(n²) bytes (the PR 5
+    ``_ship_log`` bug); ``ObjectStore.append`` grows the blob in place.
+    Flags a ``.put`` whose arguments re-read the same receiver via
+    ``.get``, and loops that both ``.get(k)`` and ``.put(k, ...)`` the
+    same receiver+key."""
+
+    id = "SC103"
+    title = "ObjectStore read-modify-write (get+put) loop"
+    rationale = ("put(k, get(k)+delta) is O(n^2) over n updates and races "
+                 "concurrent writers; use ObjectStore.append")
+    scopes = ("repro/",)
+
+    @staticmethod
+    def _calls(node: ast.AST, method: str) -> List[ast.Call]:
+        out = []
+        for n in ast.walk(node):
+            if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute) \
+                    and n.func.attr == method:
+                out.append(n)
+        return out
+
+    def check(self, tree, lines, path) -> Iterable[Finding]:
+        for node in ast.walk(tree):
+            # direct RMW: x.put(k, ... x.get(k) ...)
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "put":
+                recv = ast.dump(node.func.value)
+                for arg in node.args + [kw.value for kw in node.keywords]:
+                    for g in self._calls(arg, "get"):
+                        if ast.dump(g.func.value) == recv:
+                            yield self.finding(
+                                path, node, "put() rebuilt from get() on "
+                                "the same store — read-modify-write; use "
+                                "append()")
+            # loop-carried RMW: for/while body gets and puts the same key
+            if isinstance(node, (ast.For, ast.While)):
+                gets = {(ast.dump(g.func.value), ast.dump(g.args[0]))
+                        for g in self._calls(node, "get") if g.args}
+                for p in self._calls(node, "put"):
+                    if p.args and (ast.dump(p.func.value),
+                                   ast.dump(p.args[0])) in gets:
+                        yield self.finding(
+                            path, p, "get()+put() of the same key inside "
+                            "a loop — read-modify-write; use append()")
+
+
+class GlobalCounterRule(Rule):
+    """SC104 — no module-global mutable counters in ``core/``.  A
+    module-global id counter resets on process restart and bleeds across
+    platform instances in one test process (the PR 3 job-id class);
+    durable ids must go through ``MetadataStore.bump_counter``."""
+
+    id = "SC104"
+    title = "module-global mutable counter in core/"
+    rationale = ("module globals reset on restart and bleed across "
+                 "platform instances; durable ids go through "
+                 "MetadataStore.bump_counter")
+    scopes = ("repro/core/",)
+
+    def check(self, tree, lines, path) -> Iterable[Finding]:
+        module_ints = set()
+        for node in tree.body if isinstance(tree, ast.Module) else []:
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Constant) \
+                    and isinstance(node.value.value, int):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        module_ints.add(t.id)
+        if not module_ints:
+            return
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            declared = {n for g in ast.walk(fn)
+                        if isinstance(g, ast.Global) for n in g.names}
+            mutated = declared & module_ints
+            if not mutated:
+                continue
+            for n in ast.walk(fn):
+                wrote = None
+                if isinstance(n, ast.AugAssign) \
+                        and isinstance(n.target, ast.Name) \
+                        and n.target.id in mutated:
+                    wrote = n
+                elif isinstance(n, ast.Assign):
+                    for t in n.targets:
+                        if isinstance(t, ast.Name) and t.id in mutated:
+                            wrote = n
+                if wrote is not None:
+                    yield self.finding(
+                        path, wrote, "module-global counter mutation; "
+                        "durable ids must use MetadataStore.bump_counter")
+
+
+class WallClockRule(Rule):
+    """SC105 — no wall-clock reads in sim-driven code.  The platform runs
+    on virtual time (``sim.now``); ``time.time()``/``datetime.now()``
+    values leaking into journals, snapshots, or artifacts make replay
+    non-deterministic.  Monotonic *interval* clocks
+    (``time.perf_counter``/``time.monotonic``) remain legal for CLI
+    benchmark timing."""
+
+    id = "SC105"
+    title = "wall-clock read in sim-driven code"
+    rationale = ("virtual-time code reading the wall clock breaks "
+                 "deterministic replay; use sim.now (durations: "
+                 "time.perf_counter)")
+    scopes = SIM_SCOPES
+
+    BANNED = {
+        "time.time", "time.time_ns", "time.localtime", "time.gmtime",
+        "datetime.now", "datetime.utcnow", "datetime.today",
+        "datetime.datetime.now", "datetime.datetime.utcnow",
+        "datetime.datetime.today", "date.today", "datetime.date.today",
+    }
+
+    def check(self, tree, lines, path) -> Iterable[Finding]:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                name = _dotted(node.func)
+                if name in self.BANNED:
+                    yield self.finding(
+                        path, node, f"{name}() reads the wall clock; "
+                        "sim-driven code uses sim.now, interval timing "
+                        "uses time.perf_counter()")
+
+
+class BroadExceptRule(Rule):
+    """SC106 — no silent broad excepts in pod/sim code.  A bare
+    ``except:`` or ``except BaseException`` swallows SystemExit and
+    KeyboardInterrupt; an ``except Exception`` that neither re-raises nor
+    binds-and-uses the exception turns any co-tenant-relevant bug into an
+    invisible retry loop (the poisoned-pod class).  A broad handler must
+    either ``raise`` or capture the exception (``as e``) and actually use
+    it."""
+
+    id = "SC106"
+    title = "broad except swallows failures in pod/sim code"
+    rationale = ("bare/BaseException excepts eat SystemExit; except "
+                 "Exception without re-raise or use of the exception "
+                 "hides poisoned-pod failures — narrow the type")
+    scopes = SIM_SCOPES
+
+    BROAD = ("Exception", "BaseException")
+
+    @staticmethod
+    def _is_broad(handler: ast.ExceptHandler) -> str:
+        if handler.type is None:
+            return "bare except"
+        names = []
+        t = handler.type
+        elts = t.elts if isinstance(t, ast.Tuple) else [t]
+        for e in elts:
+            if isinstance(e, ast.Name):
+                names.append(e.id)
+        for n in names:
+            if n in BroadExceptRule.BROAD:
+                return f"except {n}"
+        return ""
+
+    def check(self, tree, lines, path) -> Iterable[Finding]:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            what = self._is_broad(node)
+            if not what:
+                continue
+            if what in ("bare except", "except BaseException"):
+                yield self.finding(
+                    path, node, f"{what} also catches SystemExit/"
+                    "KeyboardInterrupt; catch Exception at the very "
+                    "widest")
+                continue
+            reraises = any(isinstance(n, ast.Raise)
+                           for n in ast.walk(node))
+            uses_exc = node.name is not None and any(
+                isinstance(n, ast.Name) and n.id == node.name
+                for b in node.body for n in ast.walk(b))
+            if not reraises and not uses_exc:
+                yield self.finding(
+                    path, node, "except Exception that neither re-raises "
+                    "nor uses the exception — narrow to the expected "
+                    "failure type")
+
+
+RULES = (
+    ExitInPodRule,
+    BuiltinHashRule,
+    ObjectStoreRMWRule,
+    GlobalCounterRule,
+    WallClockRule,
+    BroadExceptRule,
+)

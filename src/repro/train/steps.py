@@ -7,8 +7,6 @@ and pjit-able; shardings come from the abstract param tree + rule table.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -22,7 +20,7 @@ from repro.dist.compression import (
     resolve_compression,
 )
 from repro.models.layers import Ctx
-from repro.models.model import forward, init_cache
+from repro.models.model import forward
 from repro.models.params import init_params
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 

@@ -1,7 +1,7 @@
 """Config registry + shape grid + parameter counting."""
 import pytest
 
-from repro.configs import SHAPES, get_config, list_configs, shape_applicable
+from repro.configs import SHAPES, get_config, shape_applicable
 from repro.models.params import count_params
 
 ASSIGNED = [

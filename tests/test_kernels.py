@@ -1,6 +1,5 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + property tests
 (interpret mode executes the kernel bodies in Python on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

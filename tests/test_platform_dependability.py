@@ -6,7 +6,6 @@ assertion is about the *system invariant*, not about timing.
 import pytest
 
 from repro.core import DLaaSPlatform, JobManifest
-from repro.core.scheduler import Unschedulable
 from repro.core.tenancy import NetworkPolicy
 
 

@@ -1,6 +1,5 @@
 """Raft/statestore: election safety, durability, availability — including
 randomized crash schedules (hypothesis)."""
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.sim import Sim

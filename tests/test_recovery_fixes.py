@@ -10,7 +10,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 import repro.core.learner as learner_mod
 from repro.configs import RunConfig, get_config

@@ -5,7 +5,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.sharding import DEFAULT_RULES, ShardingRules, logical_to_spec
+from repro.dist.sharding import DEFAULT_RULES, logical_to_spec
 
 
 def mesh2():

@@ -1,0 +1,72 @@
+"""Tier-1 meta-test: the shipped tree passes its own static-analysis
+gate, end to end through the CLI (AST rules + semantic checkers +
+baseline ratchet) — the same invocation `make staticcheck` and CI run."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run_cli(*argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.staticcheck", *argv],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=600)
+
+
+def test_repo_is_staticcheck_clean():
+    proc = run_cli("src", "--check-baseline")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout
+
+
+def test_baseline_has_no_grandfathered_findings():
+    # core/ and launch/ were burned to zero: the checked-in baseline must
+    # stay empty, and CI's --check-baseline keeps it shrink-only
+    doc = json.loads((REPO / "staticcheck_baseline.json").read_text())
+    assert doc["findings"] == []
+
+
+def test_cli_exits_nonzero_on_findings(tmp_path):
+    bad = tmp_path / "repro" / "core" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\nt = time.time()\n")
+    proc = run_cli(str(bad), "--ast-only",
+                   "--baseline", str(tmp_path / "bl.json"))
+    assert proc.returncode == 1
+    assert "SC105" in proc.stdout
+
+
+def test_cli_json_output(tmp_path):
+    bad = tmp_path / "repro" / "core" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\nt = time.time()\n")
+    proc = run_cli(str(bad), "--ast-only", "--json",
+                   "--baseline", str(tmp_path / "bl.json"))
+    assert proc.returncode == 1
+    doc = json.loads(proc.stdout)
+    assert [f["rule"] for f in doc] == ["SC105"]
+
+
+def test_cli_baseline_roundtrip_and_ratchet(tmp_path):
+    bad = tmp_path / "repro" / "core" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\nt = time.time()\n")
+    bl = tmp_path / "bl.json"
+    # grandfather the finding: the gate goes green without fixing it
+    assert run_cli(str(bad), "--ast-only", "--baseline", str(bl),
+                   "--write-baseline").returncode == 0
+    assert run_cli(str(bad), "--ast-only",
+                   "--baseline", str(bl)).returncode == 0
+    # fix the finding: the ratchet now demands the baseline entry go too
+    bad.write_text("import time\nt = time.perf_counter()\n")
+    assert run_cli(str(bad), "--ast-only",
+                   "--baseline", str(bl)).returncode == 0
+    proc = run_cli(str(bad), "--ast-only", "--baseline", str(bl),
+                   "--check-baseline")
+    assert proc.returncode == 1
+    assert "ratchet" in proc.stdout

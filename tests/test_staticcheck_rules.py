@@ -1,0 +1,336 @@
+"""Per-rule fixtures for the staticcheck AST engine: every rule has a
+true-positive fixture (fires), a suppressed fixture (marker drops it) and
+a clean fixture (no finding) — plus engine-level suppression/baseline
+semantics."""
+import json
+import textwrap
+
+from repro.staticcheck.engine import (
+    Baseline, Finding, all_rules, check_file, render_json, run_files)
+
+
+def write(tmp_path, rel, src):
+    """Write a fixture under a repo-shaped path (rule scopes are path
+    substrings, so e.g. SC101 needs a file under ``repro/core/``)."""
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(src))
+    return p
+
+
+def findings_for(tmp_path, rel, src, rule_id=None):
+    out = check_file(write(tmp_path, rel, src), all_rules())
+    if rule_id is not None:
+        out = [f for f in out if f.rule == rule_id]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SC101 — SystemExit / sys.exit in pod-reachable code
+# ---------------------------------------------------------------------------
+def test_sc101_true_positive(tmp_path):
+    src = """\
+        import sys
+        def pod():
+            raise SystemExit(1)
+        def other():
+            sys.exit(2)
+    """
+    fs = findings_for(tmp_path, "repro/core/mod.py", src, "SC101")
+    assert len(fs) == 2
+    assert {f.line for f in fs} == {3, 5}
+
+
+def test_sc101_suppressed(tmp_path):
+    src = """\
+        def pod():
+            raise SystemExit(1)  # staticcheck: ignore[SC101]
+    """
+    assert not findings_for(tmp_path, "repro/core/mod.py", src, "SC101")
+
+
+def test_sc101_clean_outside_scope(tmp_path):
+    # launch CLIs are process boundaries: SystemExit is correct there
+    src = """\
+        def main():
+            raise SystemExit(1)
+    """
+    assert not findings_for(tmp_path, "repro/launch/serve.py", src, "SC101")
+    assert not findings_for(
+        tmp_path, "repro/core/mod.py",
+        "def pod():\n    raise ValueError('bad spec')\n", "SC101")
+
+
+# ---------------------------------------------------------------------------
+# SC102 — builtin hash() near persisted state
+# ---------------------------------------------------------------------------
+def test_sc102_true_positive(tmp_path):
+    src = """\
+        def key_for(prefix):
+            return hash(tuple(prefix))
+    """
+    fs = findings_for(tmp_path, "repro/launch/mod.py", src, "SC102")
+    assert len(fs) == 1 and "salted" in fs[0].message
+
+
+def test_sc102_suppressed(tmp_path):
+    src = """\
+        def key_for(prefix):
+            # staticcheck: ignore[SC102]
+            return hash(tuple(prefix))
+    """
+    assert not findings_for(tmp_path, "repro/launch/mod.py", src, "SC102")
+
+
+def test_sc102_clean(tmp_path):
+    src = """\
+        import hashlib
+        def key_for(prefix):
+            return hashlib.blake2b(bytes(prefix), digest_size=16).hexdigest()
+    """
+    assert not findings_for(tmp_path, "repro/launch/mod.py", src, "SC102")
+
+
+# ---------------------------------------------------------------------------
+# SC103 — ObjectStore get+put read-modify-write
+# ---------------------------------------------------------------------------
+def test_sc103_direct_rmw(tmp_path):
+    src = """\
+        def ship(store, key, line):
+            store.put(key, store.get(key) + line)
+    """
+    fs = findings_for(tmp_path, "repro/core/mod.py", src, "SC103")
+    assert len(fs) == 1 and "read-modify-write" in fs[0].message
+
+
+def test_sc103_loop_rmw(tmp_path):
+    src = """\
+        def ship(store, key, lines):
+            for line in lines:
+                old = store.get(key)
+                store.put(key, old + line)
+    """
+    fs = findings_for(tmp_path, "repro/core/mod.py", src, "SC103")
+    assert len(fs) == 1
+
+
+def test_sc103_suppressed_and_clean(tmp_path):
+    sup = """\
+        def ship(store, key, line):
+            store.put(key, store.get(key) + line)  # staticcheck: ignore[SC103]
+    """
+    assert not findings_for(tmp_path, "repro/core/mod.py", sup, "SC103")
+    clean = """\
+        def ship(store, key, line):
+            store.append(key, line)
+        def disjoint(store, key, line):
+            if store.get(key) is None:
+                store.put("other", line)
+    """
+    assert not findings_for(tmp_path, "repro/core/mod.py", clean, "SC103")
+
+
+# ---------------------------------------------------------------------------
+# SC104 — module-global mutable counter in core/
+# ---------------------------------------------------------------------------
+def test_sc104_true_positive(tmp_path):
+    src = """\
+        _NEXT_ID = 0
+        def new_id():
+            global _NEXT_ID
+            _NEXT_ID += 1
+            return _NEXT_ID
+    """
+    fs = findings_for(tmp_path, "repro/core/mod.py", src, "SC104")
+    assert len(fs) == 1 and "bump_counter" in fs[0].message
+
+
+def test_sc104_suppressed(tmp_path):
+    src = """\
+        _NEXT_ID = 0
+        def new_id():
+            global _NEXT_ID
+            _NEXT_ID += 1  # staticcheck: ignore[SC104]
+            return _NEXT_ID
+    """
+    assert not findings_for(tmp_path, "repro/core/mod.py", src, "SC104")
+
+
+def test_sc104_clean(tmp_path):
+    # constant module ints without global-mutation are fine, and the rule
+    # is scoped to core/ only
+    src = "LIMIT = 8\ndef f():\n    return LIMIT\n"
+    assert not findings_for(tmp_path, "repro/core/mod.py", src, "SC104")
+    bad = """\
+        _N = 0
+        def f():
+            global _N
+            _N += 1
+    """
+    assert not findings_for(tmp_path, "repro/launch/mod.py", bad, "SC104")
+
+
+# ---------------------------------------------------------------------------
+# SC105 — wall clock in sim-driven code
+# ---------------------------------------------------------------------------
+def test_sc105_true_positive(tmp_path):
+    src = """\
+        import time, datetime
+        def stamp():
+            return time.time(), datetime.datetime.now()
+    """
+    fs = findings_for(tmp_path, "repro/launch/mod.py", src, "SC105")
+    assert len(fs) == 2
+
+
+def test_sc105_suppressed(tmp_path):
+    src = """\
+        import time
+        def stamp():
+            return time.time()  # staticcheck: ignore[SC105]
+    """
+    assert not findings_for(tmp_path, "repro/launch/mod.py", src, "SC105")
+
+
+def test_sc105_clean_interval_clocks(tmp_path):
+    src = """\
+        import time
+        def bench():
+            t0 = time.perf_counter()
+            return time.perf_counter() - t0, time.monotonic()
+    """
+    assert not findings_for(tmp_path, "repro/core/mod.py", src, "SC105")
+    # out of scope: kernels may time however they like
+    assert not findings_for(
+        tmp_path, "repro/kernels/mod.py",
+        "import time\ndef f():\n    return time.time()\n", "SC105")
+
+
+# ---------------------------------------------------------------------------
+# SC106 — broad excepts
+# ---------------------------------------------------------------------------
+def test_sc106_true_positive(tmp_path):
+    src = """\
+        def f():
+            try:
+                g()
+            except:
+                pass
+        def h():
+            try:
+                g()
+            except BaseException:
+                pass
+        def i():
+            try:
+                g()
+            except Exception:
+                pass
+    """
+    fs = findings_for(tmp_path, "repro/core/mod.py", src, "SC106")
+    assert len(fs) == 3
+    assert sum("SystemExit" in f.message for f in fs) == 2
+
+
+def test_sc106_suppressed(tmp_path):
+    src = """\
+        def f():
+            try:
+                g()
+            except Exception:  # staticcheck: ignore[SC106]
+                pass
+    """
+    assert not findings_for(tmp_path, "repro/core/mod.py", src, "SC106")
+
+
+def test_sc106_clean_reraise_or_use(tmp_path):
+    src = """\
+        def f(log):
+            try:
+                g()
+            except ValueError:
+                pass
+            try:
+                g()
+            except Exception:
+                cleanup()
+                raise
+            try:
+                g()
+            except Exception as e:
+                log(f"failed: {e}")
+    """
+    assert not findings_for(tmp_path, "repro/core/mod.py", src, "SC106")
+
+
+# ---------------------------------------------------------------------------
+# Engine semantics
+# ---------------------------------------------------------------------------
+def test_sc100_unparseable(tmp_path):
+    fs = findings_for(tmp_path, "repro/core/bad.py", "def f(:\n")
+    assert [f.rule for f in fs] == ["SC100"]
+
+
+def test_bare_ignore_suppresses_all(tmp_path):
+    src = """\
+        import time
+        def f():
+            return time.time()  # staticcheck: ignore
+    """
+    assert not findings_for(tmp_path, "repro/core/mod.py", src)
+
+
+def test_suppression_on_line_above(tmp_path):
+    src = """\
+        import time
+        def f():
+            # staticcheck: ignore[SC105]
+            return time.time()
+    """
+    assert not findings_for(tmp_path, "repro/core/mod.py", src, "SC105")
+
+
+def test_suppression_is_per_rule(tmp_path):
+    src = """\
+        import time
+        def f():
+            return time.time()  # staticcheck: ignore[SC101]
+    """
+    assert findings_for(tmp_path, "repro/core/mod.py", src, "SC105")
+
+
+def test_run_files_walks_tree(tmp_path):
+    write(tmp_path, "repro/core/a.py", "import time\nt = time.time()\n")
+    write(tmp_path, "repro/core/b.py", "x = 1\n")
+    fs = run_files([str(tmp_path)])
+    assert [f.rule for f in fs] == ["SC105"]
+
+
+def test_baseline_multiset_and_ratchet(tmp_path):
+    f = Finding("SC105", "repro/core/a.py", 3, "time.time() ...")
+    bl = Baseline([f.fingerprint()])
+    # one entry absorbs exactly one live finding; a second is NEW
+    new, old = bl.apply([f, Finding("SC105", "repro/core/a.py", 9,
+                                    "time.time() ...")])
+    assert len(new) == 1 and len(old) == 1
+    # entry no longer firing -> stale (must be deleted: burn-down ratchet)
+    assert bl.stale([]) == [f.fingerprint()]
+    assert bl.stale([f]) == []
+
+
+def test_baseline_save_load_roundtrip(tmp_path):
+    f = Finding("SC103", "repro/core/h.py", 10, "get+put")
+    path = tmp_path / "baseline.json"
+    Baseline.save(path, [f])
+    doc = json.loads(path.read_text())
+    assert doc["findings"] == [f.fingerprint()]
+    bl = Baseline.load(path)
+    assert bl.apply([f]) == ([], [f])
+    assert Baseline.load(tmp_path / "missing.json").apply([f])[0] == [f]
+
+
+def test_render_json_is_machine_readable():
+    f = Finding("SC101", "repro/core/x.py", 2, "raise SystemExit")
+    doc = json.loads(render_json([f]))
+    assert doc == [{"rule": "SC101", "path": "repro/core/x.py", "line": 2,
+                    "message": "raise SystemExit"}]

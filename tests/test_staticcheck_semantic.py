@@ -1,0 +1,264 @@
+"""Semantic checkers (SC201/SC202/SC203): the real repo must be clean,
+and injected defects must fire — the checkers are themselves tested by
+mutation, not just by the happy path."""
+import textwrap
+
+import jax.numpy as jnp
+
+from repro.staticcheck import drift_check, kernel_check, sharding_check
+from repro.staticcheck.kernel_check import _check_layout
+from repro.staticcheck.sharding_check import MESH_VOCAB, _validate_spec
+from repro.kernels.layout import KernelLayout, SpecDesc
+
+
+# ---------------------------------------------------------------------------
+# The shipped repo passes all three checkers
+# ---------------------------------------------------------------------------
+def test_repo_sharding_clean():
+    assert sharding_check.check() == []
+
+
+def test_repo_kernels_clean():
+    assert kernel_check.check() == []
+
+
+def test_repo_drift_clean():
+    assert drift_check.check() == []
+
+
+# ---------------------------------------------------------------------------
+# SC201 — sharding
+# ---------------------------------------------------------------------------
+def test_sharding_covers_every_config_on_both_meshes(monkeypatch):
+    """Acceptance: the checker walks every registered config against the
+    single-pod AND multi-pod production meshes."""
+    import repro.configs.base as cfg_mod
+    import repro.dist.mesh as mesh_mod
+
+    seen_cfgs = []
+    seen_meshes = []
+    real_get, real_mesh = cfg_mod.get_config, \
+        mesh_mod.make_abstract_production_mesh
+    monkeypatch.setattr(cfg_mod, "get_config",
+                        lambda name: seen_cfgs.append(name) or real_get(name))
+    monkeypatch.setattr(
+        mesh_mod, "make_abstract_production_mesh",
+        lambda **kw: seen_meshes.append(kw.get("multi_pod", False))
+        or real_mesh(**kw))
+
+    assert sharding_check.check() == []
+    assert set(seen_cfgs) == set(cfg_mod.list_configs())
+    assert set(seen_meshes) == {False, True}
+
+
+def test_sharding_validator_unknown_axis():
+    probs = _validate_spec("w", ("tensor",), (16,), {"data": 4, "model": 2})
+    assert len(probs) == 1 and "not a mesh axis" in probs[0]
+
+
+def test_sharding_validator_use_once():
+    probs = _validate_spec("w", (("data", "data"),), (16,), {"data": 4})
+    assert any("used twice" in p for p in probs)
+
+
+def test_sharding_validator_divisibility():
+    probs = _validate_spec("w", ("data",), (10,), {"data": 4})
+    assert len(probs) == 1 and "not divisible" in probs[0]
+
+
+def test_sharding_validator_clean():
+    assert _validate_spec("w", ("data", None), (8, 3), {"data": 4}) == []
+    assert _validate_spec("w", (("pod", "data"),), (8,),
+                          {"pod": 2, "data": 4}) == []
+
+
+def test_sharding_injected_bad_rule_fires(monkeypatch):
+    # a rule naming an axis outside the mesh vocabulary must be flagged
+    import repro.dist.sharding as sh
+    assert "bogus" not in MESH_VOCAB
+    monkeypatch.setattr(sh, "DEFAULT_RULES",
+                        sh.DEFAULT_RULES.override(embed=("bogus",)))
+    findings = sharding_check.check()
+    assert any("bogus" in f.message and f.rule == "SC201" for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# SC202 — kernel layouts (mutation: broken layouts must fire)
+# ---------------------------------------------------------------------------
+def _layout(**kw):
+    base = dict(
+        name="toy",
+        grid=(4,),
+        in_specs=(SpecDesc("x", (4, 8), (1, 8), lambda i: (i, 0)),),
+        out_specs=(SpecDesc("o", (4, 8), (1, 8), lambda i: (i, 0)),),
+        scratch=(((8, 8), jnp.float32),),
+        dimension_semantics=("parallel",),
+    )
+    base.update(kw)
+    return KernelLayout(**base)
+
+
+def test_kernel_toy_layout_clean():
+    assert _check_layout(_layout(), "toy.py") == []
+
+
+def test_kernel_out_of_bounds_index():
+    bad = _layout(in_specs=(
+        SpecDesc("x", (4, 8), (1, 8), lambda i: (i + 1, 0)),))
+    fs = _check_layout(bad, "toy.py")
+    assert any("outside [0, 4)" in f.message for f in fs)
+
+
+def test_kernel_wrong_index_arity():
+    bad = _layout(in_specs=(
+        SpecDesc("x", (4, 8), (1, 8), lambda i: (i,)),))
+    fs = _check_layout(bad, "toy.py")
+    assert any("1 indices for a 2-dim block" in f.message for f in fs)
+
+
+def test_kernel_uncovered_output_block():
+    bad = _layout(out_specs=(
+        SpecDesc("o", (4, 8), (1, 8), lambda i: (0, 0)),))
+    fs = _check_layout(bad, "toy.py")
+    assert any("never written" in f.message for f in fs)
+
+
+def test_kernel_parallel_double_write():
+    # two parallel grid points writing one output block = a data race;
+    # only "arbitrary" (sequential) dims may revisit a block
+    bad = _layout(
+        grid=(2, 2),
+        dimension_semantics=("parallel", "parallel"),
+        in_specs=(SpecDesc("x", (2, 8), (1, 8), lambda i, j: (i, 0)),),
+        out_specs=(SpecDesc("o", (2, 8), (1, 8), lambda i, j: (i, 0)),))
+    fs = _check_layout(bad, "toy.py")
+    assert any("twice in parallel" in f.message for f in fs)
+    ok = _layout(
+        grid=(2, 2),
+        dimension_semantics=("parallel", "arbitrary"),
+        in_specs=(SpecDesc("x", (2, 8), (1, 8), lambda i, j: (i, 0)),),
+        out_specs=(SpecDesc("o", (2, 8), (1, 8), lambda i, j: (i, 0)),))
+    assert _check_layout(ok, "toy.py") == []
+
+
+def test_kernel_low_precision_scratch():
+    bad = _layout(scratch=(((8, 8), jnp.bfloat16),))
+    fs = _check_layout(bad, "toy.py")
+    assert any("must be float32" in f.message for f in fs)
+
+
+def test_kernel_semantics_arity_mismatch():
+    bad = _layout(dimension_semantics=("parallel", "parallel"))
+    fs = _check_layout(bad, "toy.py")
+    assert any("arity" in f.message for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# SC203 — snapshot/journal drift (mutation: synthetic engine tree)
+# ---------------------------------------------------------------------------
+GOOD_ENGINE = textwrap.dedent("""\
+    class SeqRecord:
+        request: object
+        done: bool
+
+    def rec_doc(rec):
+        return {"req": 0, "tokens": 1, "gen_len": 2, "done": 3}
+
+    def snapshot(self):
+        return {
+            "next": 1,
+            "slots": [],
+            "journal_len": 2,
+            "stats": {"hits": 0},
+        }
+
+    def restore(self, snap):
+        self.next = snap["next"]
+        st = snap["stats"]
+        self.hits = st["hits"]
+        for doc in snap["slots"]:
+            rec = SeqRecord(doc["req"], doc["tokens"], doc["gen_len"],
+                            doc["done"])
+        self.journal.append({"ev": "gen", "req": "r1"})
+""")
+
+GOOD_SERVER = textwrap.dedent("""\
+    def save(engine, snap_doc, vol):
+        snap_doc["engine"] = engine.snapshot()
+        vol.append("journal", {"ev": "admit", "req": "r1"})
+
+    def load(snap, engine):
+        engine.restore(snap["engine"])
+""")
+
+
+def _drift_tree(tmp_path, engine_src=GOOD_ENGINE, server_src=GOOD_SERVER):
+    eng = tmp_path / drift_check.ENGINE
+    srv = tmp_path / drift_check.SERVER
+    eng.parent.mkdir(parents=True, exist_ok=True)
+    srv.parent.mkdir(parents=True, exist_ok=True)
+    eng.write_text(engine_src)
+    srv.write_text(server_src)
+    return tmp_path
+
+
+def _messages(findings):
+    return [f.message for f in findings]
+
+
+def test_drift_synthetic_clean(tmp_path):
+    assert drift_check.check(_drift_tree(tmp_path)) == []
+
+
+def test_drift_snapshot_key_never_restored(tmp_path):
+    bad = GOOD_ENGINE.replace('"next": 1,', '"next": 1,\n        "extra": 0,')
+    fs = drift_check.check(_drift_tree(tmp_path, engine_src=bad))
+    assert any("'extra'" in m and "restore never reads" in m
+               for m in _messages(fs))
+
+
+def test_drift_restore_reads_phantom_key(tmp_path):
+    bad = GOOD_ENGINE.replace('self.next = snap["next"]',
+                              'self.next = snap["next"]\n'
+                              '    self.ghost = snap["ghost"]')
+    fs = drift_check.check(_drift_tree(tmp_path, engine_src=bad))
+    assert any("snapshot never emits" in m for m in _messages(fs))
+
+
+def test_drift_seqrecord_field_missing_from_doc(tmp_path):
+    bad = GOOD_ENGINE.replace('"done": 3}', '}').replace(
+        ',\n                            doc["done"]', '')
+    fs = drift_check.check(_drift_tree(tmp_path, engine_src=bad))
+    assert any("'done'" in m and "missing from" in m for m in _messages(fs))
+
+
+def test_drift_stats_key_never_restored(tmp_path):
+    bad = GOOD_ENGINE.replace('{"hits": 0}', '{"hits": 0, "miss": 0}')
+    fs = drift_check.check(_drift_tree(tmp_path, engine_src=bad))
+    assert any("'miss'" in m and "never restored" in m for m in _messages(fs))
+
+
+def test_drift_snapshot_only_allowlist_pruned(tmp_path):
+    bad = GOOD_ENGINE.replace('"journal_len": 2,\n', '')
+    fs = drift_check.check(_drift_tree(tmp_path, engine_src=bad))
+    assert any("prune the allowlist" in m for m in _messages(fs))
+
+
+def test_drift_journal_event_missing_req(tmp_path):
+    bad = GOOD_ENGINE.replace('{"ev": "gen", "req": "r1"}', '{"ev": "gen"}')
+    fs = drift_check.check(_drift_tree(tmp_path, engine_src=bad))
+    assert any("replay dispatches on ev/req" in m for m in _messages(fs))
+
+
+def test_drift_server_orphan_envelope_key(tmp_path):
+    bad = GOOD_SERVER.replace(
+        'snap_doc["engine"] = engine.snapshot()',
+        'snap_doc["engine"] = engine.snapshot()\n'
+        '    snap_doc["orphan"] = 1')
+    fs = drift_check.check(_drift_tree(tmp_path, server_src=bad))
+    assert any("'orphan'" in m and "never read" in m for m in _messages(fs))
+
+
+def test_drift_missing_engine_is_reported(tmp_path):
+    fs = drift_check.check(tmp_path)  # empty tree
+    assert fs and all(f.rule == "SC203" for f in fs)

@@ -22,7 +22,8 @@ lint:
 # makes the checked-in baseline shrink-only (fixed findings must be
 # removed from it).  See README §Static dependability checks.
 staticcheck:
-	PYTHONPATH=src $(PY) -m repro.staticcheck src --check-baseline
+	PYTHONPATH=src $(PY) -m repro.staticcheck src tests benchmarks \
+		--check-baseline --report artifacts/staticcheck_report.json
 
 serve-smoke:
 	PYTHONPATH=src $(PY) -m repro.launch.serve --reduced --batch 2 \

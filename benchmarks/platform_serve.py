@@ -44,12 +44,12 @@ def _spec(smoke: bool):
 
 def run_direct(spec):
     from repro.launch.engine import RealServePayload
-    t0 = time.time()
+    t0 = time.perf_counter()
     engine, requests = RealServePayload(spec).build()
     for r in requests:
         engine.submit(r)
     engine.run()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     return dt, engine.responses, {
         "decode_steps": engine.decode_steps,
         "generated": engine.generated,
@@ -59,14 +59,14 @@ def run_direct(spec):
 
 def run_platform(spec):
     from repro.core.platform import DLaaSPlatform
-    t0 = time.time()
+    t0 = time.perf_counter()
     p = DLaaSPlatform(seed=11)
     p.run(10)
     h = p.submit(spec)
     p.run(5)
     assert h.acked, h.rejected
     state = p.run_until_terminal(h.job_id, timeout=3600)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     assert state == "COMPLETED", state
     responses = {}
     for r in range(spec.serve.requests):

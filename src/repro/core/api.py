@@ -27,6 +27,7 @@ import itertools
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple, Union
 
+from repro.core import states
 from repro.core.jobspec import JobSpec
 from repro.core.manifest import JobManifest
 from repro.core.metadata import Unavailable
@@ -102,10 +103,11 @@ def make_api_proc(platform):
                     doc = {"id": job_id, "request_id": rid,
                            "name": spec.name, "kind": spec.kind,
                            "tenant": spec.tenant, "spec": spec.to_doc(),
-                           "state": "SUBMITTED", "desired_state": "RUNNING",
+                           "state": states.JOB.initial,
+                           "desired_state": "RUNNING",
                            "restarts": 0,
                            "events": [{"t": platform.sim.now,
-                                       "event": "SUBMITTED"}]}
+                                       "event": states.JOB.initial}]}
                     # persist BEFORE ack (jobs are never lost once acked);
                     # the insert is the atomicity unit, so a crash between
                     # id allocation and insert only burns an id

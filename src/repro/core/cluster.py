@@ -22,6 +22,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Deque, Dict, Generator, List, Optional, Tuple
 
 from repro.core.sim import Sim
+from repro.core.states import pod_transition
 
 PENDING, RUNNING, SUCCEEDED, FAILED = "PENDING", "RUNNING", "SUCCEEDED", "FAILED"
 
@@ -59,7 +60,7 @@ class Pod:
         self.spec = spec
         self.node = node
         self.cluster = cluster
-        self.status = PENDING
+        pod_transition(self, PENDING)
         self.incarnation = 0
         self.exit_codes: Dict[str, Any] = {}
         self.restarts = 0
@@ -75,13 +76,15 @@ class Pod:
 
     # ------------------------------------------------------------------
     def _start(self) -> None:
+        if self.status != PENDING:
+            return   # failed/replaced while its start was queued — stay dead
         if self.node is None or not self.node.alive:
             self.fail()
             return
         sim = self.cluster.sim
         self.incarnation += 1
         inc = self.incarnation
-        self.status = RUNNING
+        pod_transition(self, RUNNING)
         self.started_at = sim.now
         self.exit_codes = {}
         sim.log(f"pod/{self.name} RUNNING on {self.node.name} (inc {inc})")
@@ -101,14 +104,14 @@ class Pod:
             self.cluster.sim.log(f"pod/{self.name} container {c.name} crashed: {value}")
             self.fail()
         elif len(self.exit_codes) == len(self.spec.containers):
-            self.status = SUCCEEDED
+            pod_transition(self, SUCCEEDED)
             self.cluster.sim.log(f"pod/{self.name} SUCCEEDED")
             self.cluster._pod_done(self)
 
     def fail(self) -> None:
         if self.status in (FAILED, SUCCEEDED):
             return
-        self.status = FAILED
+        pod_transition(self, FAILED)
         self.cluster.sim.log(f"pod/{self.name} FAILED")
         self.cluster._pod_done(self)
 

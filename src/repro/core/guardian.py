@@ -19,6 +19,7 @@ from __future__ import annotations
 
 from typing import Any, Dict, List
 
+from repro.core import states
 from repro.core.cluster import ContainerSpec, Deployment, PodSpec, StatefulSet
 from repro.core.helper import (
     make_controller_proc, make_load_data_proc, make_log_collector_proc,
@@ -44,14 +45,20 @@ def make_guardian_proc(platform, job_id: str, spec: JobSpec):
         adapter = platform.frameworks.get(spec.framework)
 
         # -- helpers --------------------------------------------------------
-        def update_job(fields: Dict[str, Any], event: str = None):
+        def update_job(fields: Dict[str, Any], event: str = None, *,
+                       state: str = None):
             while True:
                 try:
-                    platform.metadata.update("jobs", job_id, fields)
-                    if event:
-                        platform.metadata.append_event(
-                            "jobs", job_id,
-                            {"t": sim.now, "event": event})
+                    if state is not None:
+                        states.job_transition(
+                            platform.metadata, sim.now, job_id, state,
+                            fields, event)
+                    else:
+                        platform.metadata.update("jobs", job_id, fields)
+                        if event:
+                            platform.metadata.append_event(
+                                "jobs", job_id,
+                                {"t": sim.now, "event": event})
                     return
                 except Unavailable:
                     yield 0.5
@@ -72,7 +79,7 @@ def make_guardian_proc(platform, job_id: str, spec: JobSpec):
             resources.append(res)
             return store.put(f"deploy/{job_id}/resources", resources)
 
-        yield from update_job({"state": "DEPLOYING"}, "DEPLOYING")
+        yield from update_job({}, "DEPLOYING", state="DEPLOYING")
 
         # (a) shared NFS volume
         yield sim.rng.uniform(*DEPLOY_STEP_TIME)
@@ -93,9 +100,14 @@ def make_guardian_proc(platform, job_id: str, spec: JobSpec):
         yield sim.rng.uniform(*DEPLOY_STEP_TIME)
         gang = adapter.gang(spec)
         world, gpus_each = gang.replicas, gang.gpus_per_replica
+        # gang_sizes must be updated in the same synchronous step as the
+        # admission: a guardian crash happens only at a yield, and a yield
+        # between admit_gang and the record would strand quota the next
+        # incarnation's rollback cannot see (SC302 flags this window).
         try:
             platform.scheduler.admit_gang(
                 cluster, spec.tenant, world, gpus_each)
+            platform.gang_sizes[job_id] = world
         except Exception:
             if not (spec.elastic and spec.kind == "train"):
                 raise
@@ -105,10 +117,10 @@ def make_guardian_proc(platform, job_id: str, spec: JobSpec):
                 raise
             platform.scheduler.admit_gang(
                 cluster, spec.tenant, world, gpus_each)
+            platform.gang_sizes[job_id] = world
             yield from update_job(
                 {"world": world},
                 f"ELASTIC admission {gang.replicas} -> {world}")
-        platform.gang_sizes[job_id] = world
         platform.volumes.get(f"vol-{job_id}").write("world", world)
         yield from record(f"gang/{job_id}")
 
@@ -152,7 +164,7 @@ def make_guardian_proc(platform, job_id: str, spec: JobSpec):
 
         platform.tenancy.metering.job_started(
             job_id, spec.tenant, gang.replicas * gpus_each, sim.now)
-        yield from update_job({"state": "PROCESSING"}, "PROCESSING")
+        yield from update_job({}, "PROCESSING", state="PROCESSING")
 
         # ---- 3. monitor until completion/failure/halt -------------------------
         if spec.kind == "train":
@@ -172,7 +184,7 @@ def _finish(platform, job_id: str, spec: JobSpec, store, update_job,
     metering.  Every monitor endgame (halt/fail/complete, any kind) runs
     through here so the bookkeeping can never drift apart."""
     yield from _teardown(platform, job_id, spec, store)
-    yield from update_job({"state": state}, event)
+    yield from update_job({}, event, state=state)
     platform.tenancy.metering.job_stopped(job_id, platform.sim.now)
 
 
@@ -343,40 +355,58 @@ def _monitor_gang(platform, job_id: str, spec: JobSpec, ss, store,
 
 
 def _aggregate(sts) -> str:
-    states = [s["state"] if s else "UNKNOWN" for s in sts]
-    order = ["FAILED", "UNREACHABLE", "STARTING", "UNKNOWN", "RUNNING",
-             "SUCCEEDED"]
-    for o in order:
-        if o in states:
+    seen = [s["state"] if s else states.UNKNOWN for s in sts]
+    worst = states.UNKNOWN
+    for o in states.LEARNER_PRIORITY:
+        if o in seen:
             worst = o
             break
     steps = [s.get("step") for s in sts if s and s.get("step") is not None]
     return f"{worst} (min step {min(steps) if steps else 0})"
 
 
+def _delete_pod_set(registry, name):
+    ctl = registry.pop(name, None)
+    if ctl is not None:
+        ctl.delete()
+        for p in ctl.pods:
+            p.fail()
+
+
+def _release_gang(platform, job_id, spec):
+    # gang_sizes (not spec.learners) is the amount actually admitted —
+    # elastic jobs may hold less, and releasing a gang that was never
+    # admitted would corrupt another tenant's quota.
+    n = platform.gang_sizes.pop(job_id, None)
+    if n is not None:
+        platform.scheduler.release_gang(
+            spec.tenant, n, spec.gpus_per_learner)
+
+
 def _rollback(platform, job_id, spec, resources):
-    """Delete partially-created resources in reverse creation order."""
+    """Delete partially-created resources in reverse creation order, then
+    sweep anything the deploy created but never recorded — a crash can
+    land between a resource's creation and its ETCD record, and resource
+    names are deterministic per job, so the sweep is idempotent."""
     for res in reversed(resources):
         kind, name = res.split("/", 1)
         yield platform.sim.rng.uniform(*DEPLOY_STEP_TIME)
-        if kind == "statefulset" and name in platform.statefulsets:
-            ss = platform.statefulsets.pop(name)
-            ss.delete()
-            for p in ss.pods:
-                p.fail()
-        elif kind == "deployment" and name in platform.deployments:
-            d = platform.deployments.pop(name)
-            d.delete()
-            for p in d.pods:
-                p.fail()
+        if kind == "statefulset":
+            _delete_pod_set(platform.statefulsets, name)
+        elif kind == "deployment":
+            _delete_pod_set(platform.deployments, name)
         elif kind == "gang":
-            n = platform.gang_sizes.pop(job_id, spec.learners)
-            platform.scheduler.release_gang(
-                spec.tenant, n, spec.gpus_per_learner)
+            _release_gang(platform, job_id, spec)
         elif kind == "netpolicy":
             platform.netpolicies.pop(job_id, None)
         elif kind == "volume":
             platform.volumes.release(name)
+    # safety-net sweep for unrecorded leftovers, reverse creation order
+    _delete_pod_set(platform.statefulsets, f"learners-{job_id}")
+    _delete_pod_set(platform.deployments, f"helper-{job_id}")
+    _release_gang(platform, job_id, spec)
+    platform.netpolicies.pop(job_id, None)
+    platform.volumes.release(f"vol-{job_id}")
 
 
 def _teardown(platform, job_id, spec, store):

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 from typing import Dict
 
+from repro.core import states
 from repro.core.jobspec import JobSpec
 
 DATA_BW_GBPS = 0.5           # object-store → volume streaming bandwidth
@@ -49,20 +50,23 @@ def make_controller_proc(platform, job_id: str, spec: JobSpec):
                 ex = vol.read(f"exit/{i}")
                 pr = vol.read(f"progress/{i}")
                 if ex == 0:
-                    st = {"state": "SUCCEEDED", "step": pr["step"] if pr else None,
-                          "t": sim.now}
+                    st = states.learner_status(
+                        "SUCCEEDED", step=pr["step"] if pr else None,
+                        t=sim.now)
                 elif ex is not None:
-                    st = {"state": "FAILED", "exit": ex, "t": sim.now}
+                    st = states.learner_status("FAILED", exit=ex, t=sim.now)
                 elif pr is None:
-                    st = {"state": "STARTING", "t": sim.now}
+                    st = states.learner_status("STARTING", t=sim.now)
                     any_running = True
                 elif sim.now - pr["t"] > stale_after:
-                    st = {"state": "UNREACHABLE", "step": pr["step"],
-                          "t": sim.now, "last_seen": pr["t"]}
+                    st = states.learner_status(
+                        "UNREACHABLE", step=pr["step"], t=sim.now,
+                        last_seen=pr["t"])
                     any_running = True
                 else:
-                    st = {"state": "RUNNING", "step": pr["step"], "t": sim.now,
-                          "stalled": pr.get("stalled", False)}
+                    st = states.learner_status(
+                        "RUNNING", step=pr["step"], t=sim.now,
+                        stalled=pr.get("stalled", False))
                     any_running = True
                 ok = yield from store.put(f"status/{job_id}/learner/{i}", st)
                 if not ok:

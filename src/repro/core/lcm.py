@@ -9,6 +9,7 @@ collection reaps resources of terminal jobs whose guardian died for good.
 """
 from __future__ import annotations
 
+from repro.core import states
 from repro.core.cluster import ContainerSpec, KJob, PodSpec
 from repro.core.guardian import make_guardian_proc, _rollback
 from repro.core.jobspec import spec_from_job_doc
@@ -57,12 +58,9 @@ def make_lcm_proc(platform):
                         # in-flight GPU-seconds forever
                         platform.tenancy.metering.job_stopped(job_id, sim.now)
                         try:
-                            platform.metadata.update(
-                                "jobs", job_id, {"state": "FAILED"})
-                            platform.metadata.append_event(
-                                "jobs", job_id,
-                                {"t": sim.now,
-                                 "event": "FAILED: guardian backoff exhausted"})
+                            states.job_transition(
+                                platform.metadata, sim.now, job_id, "FAILED",
+                                event="FAILED: guardian backoff exhausted")
                         except Unavailable:
                             pass
                     sim.spawn(reaper())
@@ -72,8 +70,9 @@ def make_lcm_proc(platform):
                     backoff_limit=GUARDIAN_BACKOFF_LIMIT,
                     on_exhausted=on_exhausted)
                 try:
-                    platform.metadata.update("jobs", job_id,
-                                             {"state": "DEPLOYING"})
+                    states.job_transition(
+                        platform.metadata, sim.now, job_id, "DEPLOYING",
+                        event="DEPLOYING (guardian created)")
                 except Unavailable:
                     pass
                 sim.log(f"lcm: guardian created for {job_id}")

@@ -10,20 +10,26 @@ Flags:
   --baseline PATH    baseline file (default: staticcheck_baseline.json
                      next to the repo's pyproject, or cwd)
   --write-baseline   grandfather all current findings into the baseline
-  --check-baseline   also fail if baseline entries went stale (the
-                     burn-down ratchet: fixed findings must be removed)
+  --check-baseline   also fail if baseline entries went stale or a
+                     suppression comment no longer suppresses anything
+                     (the burn-down ratchets: fixed findings must shed
+                     their baseline entries and ignore markers)
+  --report PATH      write a full JSON report (all findings, new vs
+                     grandfathered, stale entries/markers) — uploaded
+                     as a CI build artifact
   --ast-only         skip the semantic checkers (fast pre-commit loop)
   --semantic-only    skip the AST rules
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
 from typing import List
 
 from repro.staticcheck.engine import (
-    Baseline, Finding, render_json, render_text, run_files)
+    Baseline, Finding, Marker, render_json, render_text, run_files)
 
 
 def _default_baseline() -> Path:
@@ -35,11 +41,15 @@ def _default_baseline() -> Path:
 
 
 def semantic_findings() -> List[Finding]:
-    from repro.staticcheck import drift_check, kernel_check, sharding_check
+    from repro.staticcheck import (drift_check, kernel_check,
+                                   lifecycle_check, resource_check,
+                                   sharding_check)
     out: List[Finding] = []
     out.extend(sharding_check.check())
     out.extend(kernel_check.check())
     out.extend(drift_check.check())
+    out.extend(lifecycle_check.check())
+    out.extend(resource_check.check())
     return out
 
 
@@ -51,14 +61,16 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", type=Path, default=None)
     ap.add_argument("--write-baseline", action="store_true")
     ap.add_argument("--check-baseline", action="store_true")
+    ap.add_argument("--report", type=Path, default=None)
     ap.add_argument("--ast-only", action="store_true")
     ap.add_argument("--semantic-only", action="store_true")
     args = ap.parse_args(argv)
 
     paths = args.paths or ["src"]
     findings: List[Finding] = []
+    stale_markers: List[Marker] = []
     if not args.semantic_only:
-        findings.extend(run_files(paths))
+        findings.extend(run_files(paths, stale_out=stale_markers))
     if not args.ast_only:
         findings.extend(semantic_findings())
 
@@ -71,6 +83,9 @@ def main(argv=None) -> int:
     baseline = Baseline.load(bl_path)
     new, old = baseline.apply(findings)
     stale = baseline.stale(findings)
+
+    if args.report:
+        _write_report(args.report, findings, new, old, stale, stale_markers)
 
     if args.json:
         print(render_json(new))
@@ -90,7 +105,32 @@ def main(argv=None) -> int:
         for fp in stale:
             print(f"  {fp}")
         rc = 1
+    if args.check_baseline and stale_markers:
+        print(f"suppression ratchet: {len(stale_markers)} ignore "
+              "marker(s) no longer suppress anything and must be removed:")
+        for m in stale_markers:
+            print(f"  {m.render()}")
+        rc = 1
     return rc
+
+
+def _write_report(path: Path, findings, new, old, stale,
+                  stale_markers) -> None:
+    def as_doc(f: Finding):
+        return {"rule": f.rule, "path": f.path, "line": f.line,
+                "message": f.message}
+
+    doc = {
+        "findings": [as_doc(f) for f in findings],
+        "new": [as_doc(f) for f in new],
+        "grandfathered": len(old),
+        "stale_baseline": list(stale),
+        "stale_suppressions": [
+            {"path": m.path, "line": m.line, "ids": sorted(m.ids)}
+            for m in stale_markers],
+    }
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc, indent=2) + "\n")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,215 @@
+"""Tiny intraprocedural control-flow graph over Python AST statements.
+
+Shared substrate for the SC3xx lifecycle/resource checkers.  Nodes are
+individual ``ast.stmt`` objects plus three virtual nodes: ENTRY, EXIT
+(normal return or fall-off-the-end) and RAISE (an exception leaves the
+function).  Edge construction:
+
+* sequential statement flow; ``if`` branches carry an optional
+  ``(var, "is_none" | "not_none")`` annotation when the test is a
+  ``X is None`` / ``X is not None`` comparison, so clients can be
+  lightly path-sensitive about None-guarded acquisitions;
+* ``while`` / ``for`` model zero or one-plus iterations (body loops
+  back to the header; the ``else`` clause runs on normal exhaustion);
+* every statement inside a ``try`` body also edges to the try's
+  handler-dispatch node — any statement may raise mid-way.  Exception
+  edges are marked ``exc=True`` so clients can propagate the
+  *pre-statement* state along them (if the statement raised, its own
+  acquisitions never happened);
+* an explicit ``raise`` edges to the innermost enclosing dispatch node,
+  or to RAISE when uncaught.  Implicit exceptions from calls *outside*
+  any try are not modeled — documented under-approximation; explicit
+  raises and in-try statements are the checked class;
+* ``finally`` bodies run on the normal path only (good enough for this
+  repo's idiom, which has no try/finally around resource acquisition).
+
+Also provides dominator and post-dominator sets.  Post-dominance is
+computed w.r.t. normal exit only (EXIT, not RAISE): SC301 uses it to ask
+"does every *completed* run of this function settle?" — exceptional
+exits are the restart path, settled by the next guardian incarnation.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
+
+ENTRY, EXIT, RAISE = 0, 1, 2
+
+Cond = Optional[Tuple[str, str]]        # (var, "is_none" | "not_none")
+
+
+@dataclass(frozen=True)
+class Edge:
+    dst: int
+    cond: Cond = None
+    exc: bool = False
+
+
+def _none_test(test: ast.expr) -> Tuple[Cond, Cond]:
+    """Return (true-branch cond, false-branch cond) for ``X is None``-style
+    tests, or (None, None) when the test is anything else."""
+    if (isinstance(test, ast.Compare) and len(test.ops) == 1
+            and isinstance(test.left, ast.Name)
+            and isinstance(test.comparators[0], ast.Constant)
+            and test.comparators[0].value is None):
+        var = test.left.id
+        if isinstance(test.ops[0], ast.Is):
+            return (var, "is_none"), (var, "not_none")
+        if isinstance(test.ops[0], ast.IsNot):
+            return (var, "not_none"), (var, "is_none")
+    return None, None
+
+
+def own_subtrees(stmt: ast.AST) -> List[ast.AST]:
+    """The parts of a statement that belong to its CFG node itself.
+
+    Compound statements contribute only their header expressions — their
+    bodies are separate CFG nodes, and scanning the whole subtree would
+    double-count body events at the header.
+    """
+    if isinstance(stmt, (ast.If, ast.While)):
+        return [stmt.test]
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [stmt.target, stmt.iter]
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        return [i.context_expr for i in stmt.items]
+    if isinstance(stmt, (ast.Try, ast.ExceptHandler, ast.FunctionDef,
+                         ast.AsyncFunctionDef, ast.ClassDef)):
+        return []
+    return [stmt]
+
+
+class CFG:
+    def __init__(self, fn: ast.AST):
+        self.fn = fn
+        # index-parallel arrays; 0..2 are the virtual nodes
+        self.stmts: List[Optional[ast.stmt]] = [None, None, None]
+        self.edges: List[List[Edge]] = [[], [], []]
+        exits = self._seq(fn.body, [(ENTRY, None)], {"handlers": []})
+        self._link(exits, EXIT)
+
+    # -- construction ---------------------------------------------------
+    def _new(self, stmt: Optional[ast.stmt]) -> int:
+        self.stmts.append(stmt)
+        self.edges.append([])
+        return len(self.stmts) - 1
+
+    def _link(self, pending: List[Tuple[int, Cond]], dst: int,
+              exc: bool = False) -> None:
+        for src, cond in pending:
+            self.edges[src].append(Edge(dst, cond, exc))
+
+    def _seq(self, body: List[ast.stmt], pending, ctx):
+        for stmt in body:
+            pending = self._stmt(stmt, pending, ctx)
+        return pending
+
+    def _stmt(self, stmt: ast.stmt, pending, ctx):
+        n = self._new(stmt)
+        self._link(pending, n)
+        # any statement inside a try body may raise into its handlers
+        for dispatch in ctx["handlers"]:
+            self.edges[n].append(Edge(dispatch, None, exc=True))
+
+        if isinstance(stmt, ast.Return):
+            self.edges[n].append(Edge(EXIT))
+            return []
+        if isinstance(stmt, ast.Raise):
+            target = ctx["handlers"][-1] if ctx["handlers"] else RAISE
+            self.edges[n].append(Edge(target, None, exc=True))
+            return []
+        if isinstance(stmt, ast.Break):
+            ctx["break"].append((n, None))
+            return []
+        if isinstance(stmt, ast.Continue):
+            self.edges[n].append(Edge(ctx["continue"]))
+            return []
+        if isinstance(stmt, ast.If):
+            t_cond, f_cond = _none_test(stmt.test)
+            t_exit = self._seq(stmt.body, [(n, t_cond)], ctx)
+            f_exit = self._seq(stmt.orelse, [(n, f_cond)], ctx)
+            return t_exit + f_exit
+        if isinstance(stmt, (ast.While, ast.For)):
+            t_cond, f_cond = (None, None)
+            if isinstance(stmt, ast.While):
+                t_cond, f_cond = _none_test(stmt.test)
+            loop_ctx = dict(ctx)
+            loop_ctx["break"] = []
+            loop_ctx["continue"] = n
+            body_exit = self._seq(stmt.body, [(n, t_cond)], loop_ctx)
+            self._link(body_exit, n)                    # back-edge
+            out = self._seq(stmt.orelse, [(n, f_cond)], ctx)
+            return out + loop_ctx["break"]
+        if isinstance(stmt, ast.Try):
+            dispatch = self._new(None)                  # handler dispatch
+            body_ctx = dict(ctx)
+            body_ctx["handlers"] = ctx["handlers"] + [dispatch]
+            body_exit = self._seq(stmt.body, [(n, None)], body_ctx)
+            body_exit = self._seq(stmt.orelse, body_exit, ctx)
+            out = list(body_exit)
+            for handler in stmt.handlers:
+                h = self._new(handler)                  # `except X as e:`
+                self.edges[dispatch].append(Edge(h, None, exc=True))
+                out += self._seq(handler.body, [(h, None)], ctx)
+            if not stmt.handlers:                       # try/finally only
+                target = ctx["handlers"][-1] if ctx["handlers"] else RAISE
+                self.edges[dispatch].append(Edge(target, None, exc=True))
+            out = self._seq(stmt.finalbody, out, ctx)
+            return out
+        if isinstance(stmt, ast.With):
+            return self._seq(stmt.body, [(n, None)], ctx)
+        # FunctionDef/ClassDef/simple statements: opaque single node
+        return [(n, None)]
+
+    # -- queries --------------------------------------------------------
+    def succs(self, i: int) -> List[Edge]:
+        return self.edges[i]
+
+    def preds(self) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {i: [] for i in range(len(self.stmts))}
+        for src, es in enumerate(self.edges):
+            for e in es:
+                out[e.dst].append(src)
+        return out
+
+    def nodes_for(self, pred) -> List[int]:
+        """Node ids whose statement satisfies ``pred(stmt)``."""
+        return [i for i, s in enumerate(self.stmts)
+                if s is not None and pred(s)]
+
+
+def _dom(n_nodes: int, roots: Set[int],
+         preds: Dict[int, List[int]]) -> Dict[int, Set[int]]:
+    """Generic dominator solve: node d dominates n iff every path from a
+    root to n passes through d.  Pass reversed edges for post-dominators."""
+    full = set(range(n_nodes))
+    dom = {i: ({i} if i in roots else set(full)) for i in range(n_nodes)}
+    changed = True
+    while changed:
+        changed = False
+        for i in range(n_nodes):
+            if i in roots:
+                continue
+            ps = preds[i]
+            new = set(full)
+            for p in ps:
+                new &= dom[p]
+            if not ps:
+                new = set()             # unreachable from the roots
+            new |= {i}
+            if new != dom[i]:
+                dom[i] = new
+                changed = True
+    return dom
+
+
+def dominators(cfg: CFG) -> Dict[int, Set[int]]:
+    return _dom(len(cfg.stmts), {ENTRY}, cfg.preds())
+
+
+def postdominators(cfg: CFG) -> Dict[int, Set[int]]:
+    """Post-dominators w.r.t. normal exit (EXIT only, not RAISE)."""
+    succs = {i: [e.dst for e in es] for i, es in enumerate(cfg.edges)}
+    return _dom(len(cfg.stmts), {EXIT}, succs)

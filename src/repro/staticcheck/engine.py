@@ -18,8 +18,10 @@ live finding (a *second* occurrence of a grandfathered pattern is new).
 from __future__ import annotations
 
 import ast
+import io
 import json
 import re
+import tokenize
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
@@ -102,6 +104,38 @@ def is_suppressed(f: Finding, lines: Sequence[str]) -> bool:
     return False
 
 
+@dataclass(frozen=True)
+class Marker:
+    """One ``# staticcheck: ignore[...]`` comment in a file.
+
+    Found by *tokenizing* (COMMENT tokens only), so marker text inside
+    string literals — e.g. test fixtures embedding sample sources —
+    never counts as a live suppression.
+    """
+
+    path: str
+    line: int
+    ids: frozenset          # empty = bare ignore (all rules)
+
+    def render(self) -> str:
+        which = ",".join(sorted(self.ids)) if self.ids else "all rules"
+        return (f"{self.path}:{self.line}: stale suppression ({which}) — "
+                f"no finding suppressed")
+
+
+def scan_markers(src: str, posix: str) -> List[Marker]:
+    out: List[Marker] = []
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(src).readline):
+            if tok.type == tokenize.COMMENT:
+                ids = suppressed_ids(tok.string)
+                if ids is not None:
+                    out.append(Marker(posix, tok.start[0], frozenset(ids)))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        pass                    # SC100 owns unparseable files
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Walker
 # ---------------------------------------------------------------------------
@@ -123,33 +157,52 @@ def iter_py_files(paths: Sequence[str]) -> List[Path]:
     return uniq
 
 
-def check_file(path: Path, rules: Sequence[Rule]) -> List[Finding]:
+def check_file(path: Path, rules: Sequence[Rule],
+               stale_out: Optional[List[Marker]] = None) -> List[Finding]:
     posix = path.as_posix()
     applicable = [r for r in rules if r.applies_to(posix)]
-    if not applicable:
-        return []
     try:
         src = path.read_text()
         tree = ast.parse(src, filename=posix)
     except (SyntaxError, UnicodeDecodeError) as e:
         return [Finding("SC100", posix, getattr(e, "lineno", 0) or 0,
                         f"unparseable file: {e.__class__.__name__}")]
+    markers = scan_markers(src, posix)
+    by_line = {m.line: m for m in markers}
+    used: set = set()
     lines = src.splitlines()
     found: List[Finding] = []
     for rule in applicable:
         for f in rule.check(tree, lines, posix):
-            if not is_suppressed(f, lines):
+            m = _matching_marker(f, by_line)
+            if m is not None:
+                used.add(m)
+            else:
                 found.append(f)
+    if stale_out is not None:
+        stale_out.extend(m for m in markers if m not in used)
     return found
 
 
+def _matching_marker(f: Finding, by_line: Dict[int, "Marker"]
+                     ) -> Optional["Marker"]:
+    for ln in (f.line, f.line - 1):
+        m = by_line.get(ln)
+        if m is not None and (not m.ids or f.rule in m.ids):
+            return m
+    return None
+
+
 def run_files(paths: Sequence[str],
-              rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
-    """Run the AST rules over every ``.py`` under ``paths``."""
+              rules: Optional[Sequence[Rule]] = None,
+              stale_out: Optional[List[Marker]] = None) -> List[Finding]:
+    """Run the AST rules over every ``.py`` under ``paths``.  When
+    ``stale_out`` is given, markers that suppressed nothing are
+    collected into it (the suppression ratchet)."""
     rules = list(rules) if rules is not None else all_rules()
     findings: List[Finding] = []
     for f in iter_py_files(paths):
-        findings.extend(check_file(f, rules))
+        findings.extend(check_file(f, rules, stale_out))
     return findings
 
 

@@ -1,0 +1,339 @@
+"""SC301 — model-checked job/pod lifecycle.
+
+Verifies the declared state machines in ``core/states.py`` and the code
+that uses them, in three layers:
+
+1. **Graph model check** (pure, on the declared tables): every state is
+   reachable from the initial state, every non-terminal state has a path
+   to a terminal, declared terminals are absorbing (no out-edges), and
+   every sink is a declared terminal.
+
+2. **Write-site routing** (AST over ``core/``): every ``{"state": ...}``
+   literal and every ``pod.status = ...`` assignment outside
+   ``states.py`` is a finding, unless it is one of two sanctioned
+   idioms — the API entry point inserting at ``states.JOB.initial``
+   (attribute reference, not a string), or a read-side echo whose value
+   is a ``doc["state"]`` subscript.  Constant state strings are also
+   checked against the declared vocabulary.
+
+3. **Terminal settlement** (CFG dominance): every call site that routes
+   a possibly-terminal state through the transition helper (a constant
+   terminal, or a non-constant state expression — conservatively
+   possibly-terminal) must sit in a function where a metering settle
+   (``.job_stopped(...)``) and a resource release (``_teardown`` /
+   ``_rollback`` / ``.release_gang(...)``) each either dominate or
+   post-dominate the transition: on every completed run of that
+   function the books balance.  Post-dominance is w.r.t. normal exit —
+   exceptional exits are the restart path, settled by the next guardian
+   incarnation (see ``cfg.py``).
+
+Like ``drift_check``, ``check()`` takes an optional ``root`` (and here
+``machines``) so tests can aim it at synthetic trees and mutated graphs.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.staticcheck import cfg as cfglib
+from repro.staticcheck.engine import Finding
+
+RULE_ID = "SC301"
+
+SETTLE_ATTRS = ("job_stopped",)
+RELEASE_NAMES = ("_teardown", "_rollback", "release_gang")
+
+
+def _core_dir(root: Optional[Path]) -> Tuple[Path, str]:
+    if root is not None:
+        return Path(root) / "src" / "repro" / "core", "src/repro/core"
+    import repro.core
+    return Path(repro.core.__file__).parent, "src/repro/core"
+
+
+def _machines():
+    from repro.core import states
+    return (states.JOB, states.POD)
+
+
+# -- layer 1: graph model check -----------------------------------------
+
+
+def _check_machine(m, path: str) -> List[Finding]:
+    out: List[Finding] = []
+
+    def f(msg: str) -> None:
+        out.append(Finding(RULE_ID, path, 1, f"{m.name}: {msg}"))
+
+    states = set(m.states)
+    succ: Dict[str, set] = {s: set() for s in states}
+    for frm, to in m.transitions:
+        if frm is not None:
+            succ[frm].add(to)
+
+    for t in m.terminal:
+        if t not in states:
+            f(f"declared terminal {t!r} not in the state vocabulary")
+    if m.initial not in states:
+        f(f"initial state {m.initial!r} not in the state vocabulary")
+        return out
+
+    # reachability from initial
+    seen = {m.initial}
+    frontier = [m.initial]
+    while frontier:
+        s = frontier.pop()
+        for n in succ[s]:
+            if n not in seen:
+                seen.add(n)
+                frontier.append(n)
+    for s in sorted(states - seen):
+        f(f"state {s!r} unreachable from {m.initial!r}")
+
+    # terminals absorb
+    for frm, to in m.transitions:
+        if frm in m.terminal:
+            f(f"terminal state {frm!r} has out-edge to {to!r} "
+              f"(terminals must be absorbing)")
+
+    # sinks are declared terminals
+    for s in sorted(states):
+        if not succ[s] and s not in m.terminal:
+            f(f"state {s!r} is a sink but not a declared terminal")
+
+    # co-reachability: every state reaches some terminal
+    coreach = set(m.terminal) & states
+    changed = True
+    while changed:
+        changed = False
+        for s in states - coreach:
+            if succ[s] & coreach:
+                coreach.add(s)
+                changed = True
+    for s in sorted(states - coreach):
+        f(f"state {s!r} has no path to any terminal state")
+    return out
+
+
+# -- layer 2 + 3: AST write sites and settlement ------------------------
+
+
+def _dotted(node: ast.expr) -> str:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_state_echo(value: ast.expr) -> bool:
+    """``doc["state"]`` — copying an existing state, not writing one."""
+    return (isinstance(value, ast.Subscript)
+            and isinstance(value.slice, ast.Constant)
+            and value.slice.value == "state")
+
+
+def _is_initial_ref(value: ast.expr) -> bool:
+    """``states.JOB.initial`` — the sanctioned entry-point insert."""
+    return isinstance(value, ast.Attribute) and value.attr == "initial"
+
+
+def _transition_state_arg(call: ast.Call) -> Optional[ast.expr]:
+    """The state argument of a transition-helper call, if this is one.
+
+    Recognizes ``[states.]job_transition(metadata, now, job_id, state,
+    ...)`` and any call carrying a ``state=`` keyword (the guardians'
+    ``update_job(fields, event, state=...)`` wrapper).
+    """
+    name = call.func.attr if isinstance(call.func, ast.Attribute) else (
+        call.func.id if isinstance(call.func, ast.Name) else "")
+    for kw in call.keywords:
+        if kw.arg == "state":
+            return kw.value
+    if name == "job_transition" and len(call.args) >= 4:
+        return call.args[3]
+    return None
+
+
+def _check_file(tree: ast.Module, rel: str, machines) -> List[Finding]:
+    job, pod = machines[0], machines[1]
+    out: List[Finding] = []
+    vocab = set(job.states) | set(pod.states)
+    from repro.core.states import LEARNER_STATES
+    vocab |= set(LEARNER_STATES)
+
+    # module-level string constants (cluster.py's PENDING/RUNNING/... )
+    consts: Dict[str, str] = {}
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign) and isinstance(stmt.value, ast.Tuple):
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Tuple) and \
+                        len(tgt.elts) == len(stmt.value.elts):
+                    for t, v in zip(tgt.elts, stmt.value.elts):
+                        if isinstance(t, ast.Name) and \
+                                isinstance(v, ast.Constant):
+                            consts[t.id] = v.value
+
+    for node in ast.walk(tree):
+        # {"state": ...} literals
+        if isinstance(node, ast.Dict):
+            for k, v in zip(node.keys, node.values):
+                if isinstance(k, ast.Constant) and k.value == "state":
+                    if isinstance(v, ast.Constant):
+                        if v.value not in vocab:
+                            out.append(Finding(
+                                RULE_ID, rel, node.lineno,
+                                f"state {v.value!r} not in the declared "
+                                f"vocabulary"))
+                        out.append(Finding(
+                            RULE_ID, rel, node.lineno,
+                            "raw {'state': ...} write bypasses "
+                            "states.job_transition"))
+                    elif not (_is_initial_ref(v) or _is_state_echo(v)):
+                        out.append(Finding(
+                            RULE_ID, rel, node.lineno,
+                            "raw {'state': ...} write bypasses "
+                            "states.job_transition"))
+        # pod.status = ... assignments
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Attribute) and tgt.attr == "status":
+                    out.append(Finding(
+                        RULE_ID, rel, node.lineno,
+                        "raw .status assignment bypasses "
+                        "states.pod_transition"))
+        # pod_transition(pod, STATUS) vocabulary via module constants
+        if isinstance(node, ast.Call):
+            name = node.func.attr if isinstance(node.func, ast.Attribute) \
+                else (node.func.id if isinstance(node.func, ast.Name) else "")
+            if name == "pod_transition" and len(node.args) >= 2:
+                arg = node.args[1]
+                val = arg.value if isinstance(arg, ast.Constant) else \
+                    consts.get(arg.id) if isinstance(arg, ast.Name) else None
+                if val is not None and val not in pod.states:
+                    out.append(Finding(
+                        RULE_ID, rel, node.lineno,
+                        f"pod status {val!r} not in the declared "
+                        f"vocabulary"))
+            if name == "learner_status" and node.args and \
+                    isinstance(node.args[0], ast.Constant):
+                if node.args[0].value not in LEARNER_STATES:
+                    out.append(Finding(
+                        RULE_ID, rel, node.lineno,
+                        f"learner status {node.args[0].value!r} not in "
+                        f"the declared vocabulary"))
+
+    # settlement: per-function CFG dominance for possibly-terminal writes
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        out.extend(_check_settlement(fn, rel, job))
+    return out
+
+
+def _stmt_has_call(stmt: ast.stmt, pred) -> bool:
+    for tree in cfglib.own_subtrees(stmt):
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and pred(node):
+                return True
+    return False
+
+
+def _check_settlement(fn, rel: str, job) -> List[Finding]:
+    # transition sites directly in this function (not in nested defs)
+    sites: List[Tuple[ast.stmt, ast.expr]] = []
+
+    COMPOUND = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef,
+                ast.If, ast.While, ast.For, ast.AsyncFor, ast.Try, ast.With,
+                ast.AsyncWith)
+
+    def scan(stmts: Sequence[ast.stmt]):
+        for stmt in stmts:
+            if isinstance(stmt, COMPOUND):
+                continue        # bodies are visited as their own statements
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Call):
+                    arg = _transition_state_arg(node)
+                    if arg is not None:
+                        sites.append((stmt, arg))
+
+    # walk only this function's own statements
+    def own_stmts(node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                continue
+            if isinstance(child, ast.stmt):
+                yield child
+                yield from own_stmts(child)
+            elif hasattr(child, "body"):
+                yield from own_stmts(child)
+
+    stmts = list(own_stmts(fn))
+    scan(stmts)
+    params = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+    sites = [(s, a) for s, a in sites
+             # a constant non-terminal state needs no settlement
+             if not (isinstance(a, ast.Constant)
+                     and a.value not in job.terminal)
+             # a state forwarded from the function's own parameter is a
+             # wrapper (update_job); settlement is checked at call sites,
+             # which pass the state as a constant or local
+             and not (isinstance(a, ast.Name) and a.id in params)]
+    if not sites:
+        return []
+
+    graph = cfglib.CFG(fn)
+    dom = cfglib.dominators(graph)
+    pdom = cfglib.postdominators(graph)
+    settle_nodes = set(graph.nodes_for(lambda s: _stmt_has_call(
+        s, lambda c: isinstance(c.func, ast.Attribute)
+        and c.func.attr in SETTLE_ATTRS)))
+    release_nodes = set(graph.nodes_for(lambda s: _stmt_has_call(
+        s, lambda c: _dotted(c.func).split(".")[-1] in RELEASE_NAMES)))
+
+    out: List[Finding] = []
+    for stmt, arg in sites:
+        ids = [i for i, s in enumerate(graph.stmts) if s is stmt]
+        if not ids:
+            continue
+        t = ids[0]
+        covered = dom[t] | pdom[t]
+        label = arg.value if isinstance(arg, ast.Constant) else "<dynamic>"
+        if not (settle_nodes & covered):
+            out.append(Finding(
+                RULE_ID, rel, stmt.lineno,
+                f"terminal transition to {label} in {fn.name}() is not "
+                f"covered by a metering settle (job_stopped)"))
+        if not (release_nodes & covered):
+            out.append(Finding(
+                RULE_ID, rel, stmt.lineno,
+                f"terminal transition to {label} in {fn.name}() is not "
+                f"covered by a resource release "
+                f"(_teardown/_rollback/release_gang)"))
+    return out
+
+
+def check(root: Optional[Path] = None, machines=None) -> List[Finding]:
+    if machines is None:
+        machines = _machines()
+    findings: List[Finding] = []
+    states_path = "src/repro/core/states.py"
+    for m in machines:
+        findings.extend(_check_machine(m, states_path))
+    core, rel_base = _core_dir(root)
+    if core.is_dir():
+        for py in sorted(core.glob("*.py")):
+            if py.name == "states.py":
+                continue
+            rel = f"{rel_base}/{py.name}"
+            try:
+                tree = ast.parse(py.read_text(), filename=str(py))
+            except SyntaxError:
+                continue        # SC100 owns parseability
+            findings.extend(_check_file(tree, rel, machines))
+    return findings

@@ -1,0 +1,303 @@
+"""SC302 — path-sensitive acquire/release pairing for declared resources.
+
+For each declared :class:`ResourcePair`, every function in the pair's
+scope is explored path-by-path over the little CFG in ``cfg.py``,
+tracking the set of held acquisitions.  A path leaks when it:
+
+* reaches normal exit still holding (unless the function is a declared
+  *provider* — e.g. ``admit_gang`` exists to return holding quota);
+* reaches an exceptional exit still holding (an explicit ``raise`` or a
+  statement inside a ``try`` body) — the classic dropped-release-on-
+  error-path bug;
+* crosses a ``yield`` while holding a non-``crash_safe`` pair.  Pods in
+  this platform crash *only at yields* (the sim checks the guard per
+  step), so an acquisition held across a yield before it is recorded
+  durably is exactly the crash window a restarted incarnation cannot
+  roll back.
+
+Holding stops when the path releases (``releases``), records ownership
+durably (``transfers``, e.g. the guardian's ETCD ``record()``), or
+stores the handle where teardown can find it (``escape_stores``, e.g.
+``platform.gang_sizes[...] = n`` / ``self.slots[b] = ...``).  Pairs with
+``none_guard`` may return None from their acquire; an ``if x is None``
+branch cancels the acquisition bound to ``x`` on the None arm.
+
+Soundness tradeoffs (documented, deliberate):
+
+* implicit exceptions from calls outside any ``try`` are not modeled
+  (see ``cfg.py``) — explicit raises and in-``try`` statements are the
+  checked class;
+* escapes/transfers/releases match by method-name + receiver-substring,
+  not alias analysis;
+* a release clears *all* held entries of its pair (batch semantics:
+  ``pool.free(pages)`` frees a list).
+
+``check(root=..., pairs=...)`` follows the drift_check pattern so tests
+can aim it at synthetic trees and mutated pair tables.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.staticcheck import cfg as cfglib
+from repro.staticcheck.engine import Finding
+
+RULE_ID = "SC302"
+
+
+@dataclass(frozen=True)
+class ResourcePair:
+    name: str
+    acquires: Tuple[str, ...] = ()
+    releases: Tuple[str, ...] = ()
+    acquire_recv: str = ""          # substring of the dotted receiver
+    release_recv: str = ""
+    providers: Tuple[str, ...] = () # functions allowed to exit holding
+    transfers: Tuple[str, ...] = ()
+    escape_stores: Tuple[str, ...] = ()
+    none_guard: bool = False
+    crash_safe: bool = False        # may be held across yields
+    structural: str = ""            # "" | "save_lease"
+    paths: Tuple[str, ...] = ()
+
+
+PAIRS: Tuple[ResourcePair, ...] = (
+    ResourcePair(
+        name="quota",
+        acquires=("reserve",), acquire_recv="tenancy",
+        releases=("release",), release_recv="tenancy",
+        providers=("admit_gang",),
+        paths=("core/scheduler.py",),
+    ),
+    ResourcePair(
+        name="gang",
+        acquires=("admit_gang",),
+        releases=("release_gang",),
+        escape_stores=("gang_sizes",),
+        paths=("core/guardian.py", "core/lcm.py"),
+    ),
+    ResourcePair(
+        name="volume",
+        acquires=("provision",), acquire_recv="volumes",
+        releases=("release",), release_recv="volumes",
+        transfers=("record",),
+        paths=("core/guardian.py",),
+    ),
+    ResourcePair(
+        name="pages",
+        acquires=("alloc", "attach"), acquire_recv="pool",
+        releases=("free",), release_recv="pool",
+        escape_stores=("slots", "pages.extend"),
+        none_guard=True,
+        paths=("launch/engine.py",),
+    ),
+    ResourcePair(
+        name="save_lease",
+        structural="save_lease",
+        crash_safe=True,            # time-bounded: stale leases expire
+        paths=("core/learner.py",),
+    ),
+)
+
+
+# -- event extraction ---------------------------------------------------
+
+
+def _dotted(node: ast.expr) -> str:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _call_name(call: ast.Call) -> str:
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    return ""
+
+
+def _call_recv(call: ast.Call) -> str:
+    if isinstance(call.func, ast.Attribute):
+        return _dotted(call.func.value)
+    return ""
+
+
+def _dict_keys(node: ast.expr) -> Tuple[str, ...]:
+    if not isinstance(node, ast.Dict):
+        return ()
+    return tuple(k.value for k in node.keys
+                 if isinstance(k, ast.Constant) and isinstance(k.value, str))
+
+
+def _assign_var(stmt: ast.stmt) -> Optional[str]:
+    if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+            and isinstance(stmt.targets[0], ast.Name):
+        return stmt.targets[0].id
+    return None
+
+
+def _stmt_events(stmt: ast.stmt, pairs):
+    """(clears, has_yield, acquires) for one statement.
+
+    ``clears`` are pair names whose held entries this statement ends
+    (release/transfer/escape); ``acquires`` are (pair, var) tuples.
+    Clears apply before the yield-crossing check and before acquires:
+    within one statement a release precedes an acquire
+    (``pages = shared + pool.alloc(...)`` idioms), and exception edges
+    out of the statement carry the pre-acquire state.
+    """
+    clears: List[str] = []
+    acquires: List[Tuple[ResourcePair, Optional[str]]] = []
+    sub = [n for tree in cfglib.own_subtrees(stmt) for n in ast.walk(tree)]
+    has_yield = any(isinstance(n, (ast.Yield, ast.YieldFrom)) for n in sub)
+    var = _assign_var(stmt)
+
+    # escape via store: `x.y[k] = v` / `x.y.attr = v`
+    store_targets: List[str] = []
+    if isinstance(stmt, ast.Assign):
+        for tgt in stmt.targets:
+            if isinstance(tgt, ast.Subscript):
+                store_targets.append(_dotted(tgt.value))
+            elif isinstance(tgt, ast.Attribute):
+                store_targets.append(_dotted(tgt))
+
+    for node in sub:
+        if not isinstance(node, ast.Call):
+            continue
+        name, recv = _call_name(node), _call_recv(node)
+        for pair in pairs:
+            if pair.structural == "save_lease":
+                if name == "write" and len(node.args) >= 2:
+                    keys = _dict_keys(node.args[1])
+                    if "saving" in keys:
+                        acquires.append((pair, None))
+                    elif "t" in keys:
+                        clears.append(pair.name)
+                continue
+            if name in pair.releases and pair.release_recv in recv:
+                clears.append(pair.name)
+            if name in pair.transfers:
+                clears.append(pair.name)
+            if any(p in f"{recv}.{name}" for p in pair.escape_stores):
+                clears.append(pair.name)
+            if name in pair.acquires and pair.acquire_recv in recv:
+                acquires.append((pair, var))
+    for pair in pairs:
+        if any(p in t for p in pair.escape_stores for t in store_targets):
+            clears.append(pair.name)
+    return clears, has_yield, acquires
+
+
+# -- path exploration ---------------------------------------------------
+
+
+def _analyze_fn(fn, pairs, rel: str) -> List[Finding]:
+    pair_by_name: Dict[str, ResourcePair] = {p.name: p for p in pairs}
+    graph = cfglib.CFG(fn)
+    events = [
+        _stmt_events(s, pairs) if s is not None and not isinstance(
+            s, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef))
+        else ([], False, [])
+        for s in graph.stmts
+    ]
+    found = set()       # (line, pair, kind) dedupe
+    out: List[Finding] = []
+
+    def leak(line: int, pname: str, acq_line: int, kind: str, msg: str):
+        key = (line, pname, acq_line, kind)
+        if key not in found:
+            found.add(key)
+            out.append(Finding(RULE_ID, rel, acq_line, msg))
+
+    seen = set()
+    stack: List[Tuple[int, frozenset]] = [(cfglib.ENTRY, frozenset())]
+    while stack:
+        node, held = stack.pop()
+        if (node, held) in seen:
+            continue
+        seen.add((node, held))
+        if node == cfglib.EXIT:
+            for pname, _, acq_line in held:
+                if fn.name in pair_by_name[pname].providers:
+                    continue
+                leak(0, pname, acq_line, "exit",
+                     f"{pname} acquired in {fn.name}() may be leaked on a "
+                     f"normal exit path")
+            continue
+        if node == cfglib.RAISE:
+            for pname, _, acq_line in held:
+                leak(1, pname, acq_line, "raise",
+                     f"{pname} acquired in {fn.name}() is leaked on an "
+                     f"exception path")
+            continue
+        clears, has_yield, acquires = events[node]
+        pre = frozenset(h for h in held if h[0] not in clears)
+        stmt = graph.stmts[node]
+        if has_yield:
+            for pname, _, acq_line in pre:
+                if not pair_by_name[pname].crash_safe:
+                    leak(stmt.lineno, pname, acq_line, "yield",
+                         f"{pname} acquired in {fn.name}() is held across "
+                         f"a yield at line {stmt.lineno} before being "
+                         f"recorded — a crash there strands it")
+        post = set(pre)
+        for pair, var in acquires:
+            post.add((pair.name, var, stmt.lineno))
+        post = frozenset(post)
+        for edge in graph.succs(node):
+            st = pre if edge.exc else post
+            if edge.cond is not None:
+                cvar, ckind = edge.cond
+                if ckind == "is_none":
+                    st = frozenset(
+                        h for h in st
+                        if not (pair_by_name[h[0]].none_guard
+                                and h[1] == cvar))
+            stack.append((edge.dst, st))
+    return out
+
+
+# -- entry point --------------------------------------------------------
+
+
+def _iter_files(root: Optional[Path], pairs):
+    rels = sorted({p for pair in pairs for p in pair.paths})
+    for rel_tail in rels:
+        rel = f"src/repro/{rel_tail}"
+        if root is not None:
+            path = Path(root) / rel
+        else:
+            import importlib
+            mod = "repro." + rel_tail[:-3].replace("/", ".")
+            try:
+                path = Path(importlib.import_module(mod).__file__)
+            except ImportError:
+                continue
+        if path.is_file():
+            yield rel, rel_tail, path
+
+
+def check(root: Optional[Path] = None, pairs=None) -> List[Finding]:
+    if pairs is None:
+        pairs = PAIRS
+    findings: List[Finding] = []
+    for rel, rel_tail, path in _iter_files(root, pairs):
+        in_scope = [p for p in pairs
+                    if any(t in rel for t in p.paths)]
+        try:
+            tree = ast.parse(path.read_text(), filename=str(path))
+        except SyntaxError:
+            continue            # SC100 owns parseability
+        for fn in ast.walk(tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                findings.extend(_analyze_fn(fn, in_scope, rel))
+    return findings

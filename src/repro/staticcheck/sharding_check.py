@@ -92,10 +92,20 @@ def check() -> List[Finding]:
         cfg = get_config(cfg_name)
         params_ab = MP.abstract_params(cfg)
         cache_ab = _cache_ab(cfg, decode_shape)
+        # optimizer (Adam m/v) and gradient-compression error-feedback
+        # state mirror the params tree leaf-for-leaf with replicated
+        # scalar counters — the same shapes launch.specs.state_specs
+        # materializes, so a params leaf that shards is not enough: its
+        # optimizer mirrors must go through the rule table too.
+        scalar_ab = MP.ParamAb(shape=(), logical_axes=())
+        opt_ab = {"m": params_ab, "v": params_ab, "count": scalar_ab}
+        err_ab = {"err": params_ab}
         for mesh_name, mesh in meshes:
             sizes = _mesh_sizes(mesh)
             for tree_name, tree in (("params", params_ab),
-                                    ("cache", cache_ab)):
+                                    ("cache", cache_ab),
+                                    ("opt", opt_ab),
+                                    ("err", err_ab)):
                 leaves, _ = jax.tree_util.tree_flatten_with_path(
                     tree, is_leaf=lambda x: hasattr(x, "logical_axes"))
                 for path, ab in leaves:

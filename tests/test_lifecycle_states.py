@@ -1,0 +1,228 @@
+"""Declared lifecycle state machines (core/states.py) and the runtime
+that routes through them: transition validation + event journaling,
+learner-status aggregation priority, pod lifecycle strictness (no
+zombie resurrection), and the rollback safety-net sweep."""
+import pytest
+
+from repro.core import states
+from repro.core.guardian import _aggregate
+from repro.core.states import (InvalidTransition, JOB, LEARNER_PRIORITY,
+                               LEARNER_STATES, POD, UNKNOWN)
+
+
+# ---------------------------------------------------------------------------
+# state machine tables
+# ---------------------------------------------------------------------------
+def test_job_machine_shape():
+    assert JOB.initial == "SUBMITTED"
+    assert set(JOB.terminal) == {"COMPLETED", "FAILED", "HALTED"}
+    # the restart back-edge the guardian redeploy depends on
+    assert ("PROCESSING", "DEPLOYING") in JOB.transitions
+
+
+def test_allowed_and_check():
+    assert JOB.allowed("SUBMITTED", "DEPLOYING")
+    assert JOB.allowed("PROCESSING", "PROCESSING")     # idempotent re-assert
+    assert not JOB.allowed("COMPLETED", "DEPLOYING")   # terminals absorb
+    assert not JOB.allowed("SUBMITTED", "COMPLETED")
+    with pytest.raises(InvalidTransition):
+        JOB.check("COMPLETED", "DEPLOYING")
+    # InvalidTransition keeps the in-pod error contract
+    assert issubclass(InvalidTransition, ValueError)
+
+
+def test_pod_machine_shape():
+    assert POD.allowed("PENDING", "RUNNING")
+    assert POD.allowed("RUNNING", "FAILED")
+    assert not POD.allowed("FAILED", "RUNNING")        # no resurrection
+    assert not POD.allowed("SUCCEEDED", "RUNNING")
+    assert not POD.allowed("PENDING", "SUCCEEDED")     # must run first
+
+
+# ---------------------------------------------------------------------------
+# job_transition helper
+# ---------------------------------------------------------------------------
+class FakeMetadata:
+    def __init__(self, doc):
+        self.doc = doc
+        self.events = []
+
+    def get(self, coll, doc_id):
+        return self.doc
+
+    def update(self, coll, doc_id, fields):
+        self.doc.update(fields)
+
+    def append_event(self, coll, doc_id, event):
+        self.events.append(event)
+
+
+def test_job_transition_updates_and_journals():
+    md = FakeMetadata({"id": "j1", "state": "PROCESSING"})
+    states.job_transition(md, 12.5, "j1", "COMPLETED",
+                          fields={"note": "done"}, event="COMPLETED")
+    assert md.doc["state"] == "COMPLETED"
+    assert md.doc["note"] == "done"
+    assert md.events == [{"t": 12.5, "event": "COMPLETED",
+                          "from": "PROCESSING", "to": "COMPLETED"}]
+
+
+def test_job_transition_rejects_undeclared_edge():
+    md = FakeMetadata({"id": "j1", "state": "COMPLETED"})
+    with pytest.raises(InvalidTransition):
+        states.job_transition(md, 1.0, "j1", "DEPLOYING")
+    assert md.doc["state"] == "COMPLETED"      # rejected before any write
+    assert md.events == []
+
+
+def test_job_transition_idempotent_retry():
+    # a retry after a partially-committed write re-asserts the same state
+    md = FakeMetadata({"id": "j1", "state": "DEPLOYING"})
+    states.job_transition(md, 2.0, "j1", "DEPLOYING")
+    assert md.doc["state"] == "DEPLOYING"
+
+
+def test_learner_status_validates_vocabulary():
+    st = states.learner_status("RUNNING", step=7, t=1.0)
+    assert st == {"state": "RUNNING", "step": 7, "t": 1.0}
+    with pytest.raises(InvalidTransition):
+        states.learner_status("LIMBO", t=1.0)
+
+
+# ---------------------------------------------------------------------------
+# _aggregate priority (ISSUE satellite: UNKNOWN/UNREACHABLE vs RUNNING)
+# ---------------------------------------------------------------------------
+def _st(state, step=None):
+    d = {"state": state}
+    if step is not None:
+        d["step"] = step
+    return d
+
+
+def test_aggregate_failed_dominates_everything():
+    sts = [_st("RUNNING", 5), _st("FAILED"), _st("UNREACHABLE", 3)]
+    assert _aggregate(sts).startswith("FAILED")
+
+
+def test_aggregate_unreachable_beats_running():
+    sts = [_st("RUNNING", 9), _st("UNREACHABLE", 2), _st("RUNNING", 4)]
+    assert _aggregate(sts).startswith("UNREACHABLE")
+
+
+def test_aggregate_missing_status_is_unknown_and_beats_running():
+    # a learner with no status doc yet degrades the gang below RUNNING
+    sts = [_st("RUNNING", 5), None]
+    assert _aggregate(sts).startswith(UNKNOWN)
+
+
+def test_aggregate_starting_beats_unknown():
+    sts = [_st("STARTING"), None]
+    assert _aggregate(sts).startswith("STARTING")
+
+
+def test_aggregate_all_succeeded_and_min_step():
+    sts = [_st("SUCCEEDED", 10), _st("SUCCEEDED", 7)]
+    assert _aggregate(sts) == "SUCCEEDED (min step 7)"
+
+
+def test_aggregate_total_over_declared_vocabulary():
+    # every declared learner state (plus the synthetic UNKNOWN) aggregates
+    # without KeyError/UnboundLocalError, and maps to itself when alone
+    for s in sorted(LEARNER_STATES):
+        assert _aggregate([_st(s)]).startswith(s)
+    assert _aggregate([None]).startswith(UNKNOWN)
+    assert set(LEARNER_PRIORITY) == LEARNER_STATES | {UNKNOWN}
+
+
+# ---------------------------------------------------------------------------
+# pod lifecycle strictness: no zombie resurrection
+# ---------------------------------------------------------------------------
+def test_pod_start_after_fail_stays_dead():
+    from repro.core.cluster import Cluster, ContainerSpec, Pod, PodSpec
+    from repro.core.sim import Sim
+    sim = Sim(seed=0)
+    cluster = Cluster(sim, n_nodes=1, gpus_per_node=8)
+    spec = PodSpec(name="p0", containers=[ContainerSpec(
+        "c", lambda pod: iter(()))])
+    pod = Pod(spec, cluster.nodes[0], cluster)
+    pod.uid = "p0#0"
+    cluster.pods[pod.uid] = pod
+    assert pod.status == "PENDING"
+    pod.fail()                      # e.g. node crashed while PENDING
+    assert pod.status == "FAILED"
+    pod._start()                    # the queued start fires anyway
+    assert pod.status == "FAILED"   # guard: FAILED -> RUNNING is undeclared
+
+
+def test_pod_transition_rejects_resurrection():
+    class P:
+        status = "FAILED"
+    with pytest.raises(InvalidTransition):
+        states.pod_transition(P(), "RUNNING")
+
+
+# ---------------------------------------------------------------------------
+# rollback safety net: unrecorded leftovers are settled idempotently
+# ---------------------------------------------------------------------------
+def test_rollback_sweeps_unrecorded_gang_and_volume():
+    """A guardian crash between a resource's creation and its ETCD record
+    leaves no record — the next rollback must still release it."""
+    from repro.core.guardian import _rollback
+    from repro.core.jobspec import JobSpec, Resources
+    from repro.core.platform import DLaaSPlatform
+
+    p = DLaaSPlatform(n_nodes=2, gpus_per_node=8)
+    spec = JobSpec(name="j", kind="train",
+                   resources=Resources(replicas=2, gpus_per_replica=1))
+    job_id = "job-0001"
+    # simulate the crash window: gang admitted + volume provisioned, but
+    # the deploy record list is still empty
+    p.scheduler.admit_gang(p.cluster, spec.tenant, 2, 1)
+    p.gang_sizes[job_id] = 2
+    p.volumes.provision(f"vol-{job_id}")
+    assert p.tenancy.allocated.get("default", 0) == 2
+
+    def run():
+        yield from _rollback(p, job_id, spec, [])   # empty record
+    p.sim.spawn(run())
+    p.sim.run(until=60.0)
+
+    assert p.tenancy.allocated.get("default", 0) == 0
+    assert p.volumes.active() == []
+    assert job_id not in p.gang_sizes
+
+
+def test_rollback_without_admitted_gang_releases_nothing():
+    """The old default (pop(job_id, spec.learners)) released quota that
+    was never admitted, corrupting the tenant's allocation downward."""
+    from repro.core.guardian import _rollback
+    from repro.core.jobspec import JobSpec, Resources
+    from repro.core.platform import DLaaSPlatform
+
+    p = DLaaSPlatform(n_nodes=2, gpus_per_node=8)
+    spec = JobSpec(name="j", kind="train",
+                   resources=Resources(replicas=4, gpus_per_replica=1))
+    # another job holds quota under the same tenant
+    p.scheduler.admit_gang(p.cluster, "default", 3, 1)
+    before = p.tenancy.allocated.get("default", 0)
+
+    def run():
+        # job-0002 recorded a gang it never actually admitted (crash
+        # before admission): rollback must not release someone else's
+        yield from _rollback(p, "job-0002", spec, ["gang/job-0002"])
+    p.sim.spawn(run())
+    p.sim.run(until=60.0)
+    assert p.tenancy.allocated.get("default", 0) == before
+
+
+# ---------------------------------------------------------------------------
+# README carries the rendered diagrams (ISSUE satellite)
+# ---------------------------------------------------------------------------
+def test_readme_state_diagrams_match_declared_tables():
+    from pathlib import Path
+    readme = (Path(__file__).resolve().parents[1] / "README.md").read_text()
+    for machine in (JOB, POD):
+        diagram = states.render_mermaid(machine)
+        assert diagram in readme, (
+            f"README state diagram for {machine.name} is out of date — "
+            f"re-render with states.render_mermaid()")

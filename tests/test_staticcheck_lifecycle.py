@@ -1,0 +1,288 @@
+"""SC301/SC302 mutation-injection tests.
+
+Each mutation plants exactly the bug class the checker claims to catch —
+an undeclared transition, a terminal path missing its metering settle,
+a dropped Quota.release on an exception path, a resource held across a
+crash-point yield — and asserts the checker flags it, alongside
+positive controls proving the unmutated idiom passes."""
+import textwrap
+from pathlib import Path
+
+from repro.core.states import POD, StateMachine
+from repro.staticcheck import lifecycle_check, resource_check
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _core_tree(tmp_path, name, src):
+    d = tmp_path / "src" / "repro" / "core"
+    d.mkdir(parents=True, exist_ok=True)
+    (d / name).write_text(textwrap.dedent(src))
+    return tmp_path
+
+
+def _launch_tree(tmp_path, name, src):
+    d = tmp_path / "src" / "repro" / "launch"
+    d.mkdir(parents=True, exist_ok=True)
+    (d / name).write_text(textwrap.dedent(src))
+    return tmp_path
+
+
+# ---------------------------------------------------------------------------
+# the live repo is clean under both checkers (baseline stays empty)
+# ---------------------------------------------------------------------------
+def test_live_tree_sc301_clean():
+    assert lifecycle_check.check() == []
+
+
+def test_live_tree_sc302_clean():
+    assert resource_check.check() == []
+
+
+# ---------------------------------------------------------------------------
+# SC301 graph model checks (mutated machines)
+# ---------------------------------------------------------------------------
+def _job_like(transitions, terminal=("COMPLETED", "FAILED")):
+    return StateMachine(name="job", initial="SUBMITTED",
+                        transitions=transitions, terminal=terminal)
+
+
+def test_sc301_flags_undeclared_terminal_outedge(tmp_path):
+    # mutation: COMPLETED -> DEPLOYING (a terminal that is not absorbing)
+    m = _job_like((
+        (None, "SUBMITTED"), ("SUBMITTED", "DEPLOYING"),
+        ("DEPLOYING", "COMPLETED"), ("DEPLOYING", "FAILED"),
+        ("COMPLETED", "DEPLOYING"),
+    ))
+    fs = lifecycle_check.check(root=tmp_path, machines=(m, POD))
+    assert any("absorbing" in f.message for f in fs)
+
+
+def test_sc301_flags_unreachable_and_dead_end_states(tmp_path):
+    # LIMBO hangs off DEPLOYING with no way out; ORPHan is unreachable
+    m = _job_like((
+        (None, "SUBMITTED"), ("SUBMITTED", "DEPLOYING"),
+        ("DEPLOYING", "COMPLETED"), ("DEPLOYING", "FAILED"),
+        ("DEPLOYING", "LIMBO"), ("ORPHAN", "FAILED"),
+    ))
+    fs = lifecycle_check.check(root=tmp_path, machines=(m, POD))
+    msgs = " | ".join(f.message for f in fs)
+    assert "'LIMBO' is a sink but not a declared terminal" in msgs
+    assert "'LIMBO' has no path to any terminal" in msgs
+    assert "'ORPHAN' unreachable" in msgs
+
+
+def test_sc301_declared_tables_model_check_clean(tmp_path):
+    # positive control: the shipped machines pass the model check alone
+    assert lifecycle_check.check(root=tmp_path) == []
+
+
+# ---------------------------------------------------------------------------
+# SC301 write-site routing + vocabulary (synthetic core files)
+# ---------------------------------------------------------------------------
+def test_sc301_flags_raw_state_write_and_bad_vocabulary(tmp_path):
+    root = _core_tree(tmp_path, "rogue.py", """\
+        def mark(metadata, job_id):
+            metadata.update("jobs", job_id, {"state": "LIMBO"})
+    """)
+    fs = lifecycle_check.check(root=root)
+    msgs = " | ".join(f.message for f in fs)
+    assert "bypasses states.job_transition" in msgs
+    assert "'LIMBO' not in the declared vocabulary" in msgs
+
+
+def test_sc301_flags_raw_pod_status_assignment(tmp_path):
+    root = _core_tree(tmp_path, "rogue.py", """\
+        def resurrect(pod):
+            pod.status = "RUNNING"
+    """)
+    fs = lifecycle_check.check(root=root)
+    assert any("bypasses states.pod_transition" in f.message for f in fs)
+
+
+def test_sc301_allows_entry_insert_and_state_echo(tmp_path):
+    root = _core_tree(tmp_path, "gateway.py", """\
+        from repro.core import states
+
+        def insert(metadata, job_id, now):
+            doc = {"id": job_id, "state": states.JOB.initial}
+            metadata.insert("jobs", job_id, doc)
+
+        def status_view(doc):
+            return {"id": doc["id"], "state": doc["state"]}
+    """)
+    assert lifecycle_check.check(root=root) == []
+
+
+# ---------------------------------------------------------------------------
+# SC301 terminal settlement (mutation: drop the metering settle)
+# ---------------------------------------------------------------------------
+FINISH_OK = """\
+    def _finish(platform, job_id, spec, store, update_job, state, event):
+        yield from _teardown(platform, job_id, spec, store)
+        yield from update_job({}, event, state="FAILED")
+        platform.tenancy.metering.job_stopped(job_id, platform.sim.now)
+"""
+
+
+def test_sc301_settled_terminal_path_is_clean(tmp_path):
+    root = _core_tree(tmp_path, "finisher.py", FINISH_OK)
+    assert lifecycle_check.check(root=root) == []
+
+
+def test_sc301_flags_terminal_path_missing_metering_settle(tmp_path):
+    root = _core_tree(tmp_path, "finisher.py", """\
+        def _finish(platform, job_id, spec, store, update_job, state, event):
+            yield from _teardown(platform, job_id, spec, store)
+            yield from update_job({}, event, state="FAILED")
+    """)
+    fs = lifecycle_check.check(root=root)
+    assert any("not covered by a metering settle" in f.message for f in fs)
+    assert not any("resource release" in f.message for f in fs)
+
+
+def test_sc301_flags_terminal_path_missing_resource_release(tmp_path):
+    root = _core_tree(tmp_path, "finisher.py", """\
+        def _finish(platform, job_id, spec, store, update_job, state, event):
+            yield from update_job({}, event, state="FAILED")
+            platform.tenancy.metering.job_stopped(job_id, platform.sim.now)
+    """)
+    fs = lifecycle_check.check(root=root)
+    assert any("not covered by a resource release" in f.message for f in fs)
+
+
+def test_sc301_settlement_on_conditional_path_only_is_flagged(tmp_path):
+    # the settle exists but only on one branch: neither dominates nor
+    # post-dominates the transition
+    root = _core_tree(tmp_path, "finisher.py", """\
+        def _finish(platform, job_id, spec, store, update_job, ok):
+            yield from _teardown(platform, job_id, spec, store)
+            yield from update_job({}, "done", state="COMPLETED")
+            if ok:
+                platform.tenancy.metering.job_stopped(job_id, 0.0)
+    """)
+    fs = lifecycle_check.check(root=root)
+    assert any("metering settle" in f.message for f in fs)
+
+
+def test_sc301_nonterminal_constant_needs_no_settlement(tmp_path):
+    root = _core_tree(tmp_path, "deployer.py", """\
+        def advance(update_job):
+            yield from update_job({}, "DEPLOYING", state="DEPLOYING")
+    """)
+    assert lifecycle_check.check(root=root) == []
+
+
+# ---------------------------------------------------------------------------
+# SC302: dropped Quota.release on the exception path (mutated scheduler)
+# ---------------------------------------------------------------------------
+def test_sc302_real_scheduler_is_clean(tmp_path):
+    src = (REPO / "src/repro/core/scheduler.py").read_text()
+    root = _core_tree(tmp_path, "scheduler.py", src)
+    assert resource_check.check(root=root) == []
+
+
+def test_sc302_flags_dropped_quota_release_on_exception_path(tmp_path):
+    src = (REPO / "src/repro/core/scheduler.py").read_text()
+    drop = "self.tenancy.release(tenant, n_pods * gpus_each)\n"
+    assert src.count(drop) >= 1
+    # mutation: admit_gang's infeasible arm raises without releasing
+    mutated = src.replace(
+        "                self.tenancy.release(tenant, n_pods * gpus_each)\n"
+        "                raise Unschedulable(",
+        "                raise Unschedulable(")
+    assert mutated != src
+    root = _core_tree(tmp_path, "scheduler.py", mutated)
+    fs = resource_check.check(root=root)
+    assert any("quota" in f.message and "exception path" in f.message
+               for f in fs), [f.message for f in fs]
+
+
+# ---------------------------------------------------------------------------
+# SC302: gang admission crash window (held across a yield)
+# ---------------------------------------------------------------------------
+def test_sc302_flags_gang_held_across_yield(tmp_path):
+    # mutation: the pre-fix guardian shape — a yield lands between
+    # admit_gang and the gang_sizes store; a crash there strands quota
+    root = _core_tree(tmp_path, "guardian.py", """\
+        def proc(platform, cluster, job_id, spec, world, update_job):
+            platform.scheduler.admit_gang(cluster, spec.tenant, world, 1)
+            yield from update_job({"world": world}, "ELASTIC")
+            platform.gang_sizes[job_id] = world
+    """)
+    fs = resource_check.check(root=root)
+    assert any("gang" in f.message and "held across" in f.message
+               for f in fs), [f.message for f in fs]
+
+
+def test_sc302_gang_recorded_before_yield_is_clean(tmp_path):
+    root = _core_tree(tmp_path, "guardian.py", """\
+        def proc(platform, cluster, job_id, spec, world, update_job):
+            platform.scheduler.admit_gang(cluster, spec.tenant, world, 1)
+            platform.gang_sizes[job_id] = world
+            yield from update_job({"world": world}, "ELASTIC")
+    """)
+    assert resource_check.check(root=root) == []
+
+
+# ---------------------------------------------------------------------------
+# SC302: PagePool discipline in the serving engine
+# ---------------------------------------------------------------------------
+def test_sc302_flags_dropped_page_free_on_early_return(tmp_path):
+    # mutation: admit() bails on alloc failure without freeing the
+    # refcounts it attached for the shared prefix
+    root = _launch_tree(tmp_path, "engine.py", """\
+        def admit(self, shared, n, shard):
+            for p in shared:
+                self.pool.attach(p)
+            pages = self.pool.alloc(n, shard)
+            if pages is None:
+                return False
+            self.slots[0] = shared + pages
+            return True
+    """)
+    fs = resource_check.check(root=root)
+    assert any("pages" in f.message for f in fs), [f.message for f in fs]
+
+
+def test_sc302_page_free_on_early_return_is_clean(tmp_path):
+    root = _launch_tree(tmp_path, "engine.py", """\
+        def admit(self, shared, n, shard):
+            for p in shared:
+                self.pool.attach(p)
+            pages = self.pool.alloc(n, shard)
+            if pages is None:
+                self.pool.free(shared)
+                return False
+            self.slots[0] = shared + pages
+            return True
+    """)
+    assert resource_check.check(root=root) == []
+
+
+# ---------------------------------------------------------------------------
+# SC302: chief save-window lease (structural pair)
+# ---------------------------------------------------------------------------
+def test_sc302_flags_unreleased_save_lease(tmp_path):
+    # mutation: the chief marks saving=True but never writes the
+    # heartbeat that clears it — peers treat it as saving forever
+    root = _core_tree(tmp_path, "learner.py", """\
+        def chief_save(vol, sim, step, idx):
+            vol.write(f"progress/{idx}", {"step": step, "t": sim.now,
+                                          "saving": True})
+            yield 1.0
+    """)
+    fs = resource_check.check(root=root)
+    assert any("save_lease" in f.message for f in fs), \
+        [f.message for f in fs]
+
+
+def test_sc302_save_lease_released_is_clean(tmp_path):
+    root = _core_tree(tmp_path, "learner.py", """\
+        def chief_save(vol, sim, step, idx):
+            vol.write(f"progress/{idx}", {"step": step, "t": sim.now,
+                                          "saving": True})
+            yield 1.0
+            vol.write(f"progress/{idx}", {"step": step, "t": sim.now})
+    """)
+    assert resource_check.check(root=root) == []

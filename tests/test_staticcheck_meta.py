@@ -19,7 +19,8 @@ def run_cli(*argv):
 
 
 def test_repo_is_staticcheck_clean():
-    proc = run_cli("src", "--check-baseline")
+    # the full CI scan set: tests/ and benchmarks/ ride along with src/
+    proc = run_cli("src", "tests", "benchmarks", "--check-baseline")
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "clean" in proc.stdout
 
@@ -70,3 +71,46 @@ def test_cli_baseline_roundtrip_and_ratchet(tmp_path):
                    "--check-baseline")
     assert proc.returncode == 1
     assert "ratchet" in proc.stdout
+
+
+def test_stale_suppression_fails_check_baseline(tmp_path):
+    # an ignore marker with nothing left to suppress is itself a finding
+    # under --check-baseline (and only there: plain runs stay green so
+    # the fix-then-clean-up workflow isn't blocked mid-edit)
+    bad = tmp_path / "repro" / "core" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\n"
+                   "t = time.perf_counter()  # staticcheck: ignore[SC105]\n")
+    bl = tmp_path / "bl.json"
+    assert run_cli(str(bad), "--ast-only",
+                   "--baseline", str(bl)).returncode == 0
+    proc = run_cli(str(bad), "--ast-only", "--baseline", str(bl),
+                   "--check-baseline")
+    assert proc.returncode == 1
+    assert "suppression ratchet" in proc.stdout
+    assert "stale suppression" in proc.stdout
+
+
+def test_used_suppression_is_not_stale(tmp_path):
+    bad = tmp_path / "repro" / "core" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\n"
+                   "t = time.time()  # staticcheck: ignore[SC105]\n")
+    proc = run_cli(str(bad), "--ast-only", "--check-baseline",
+                   "--baseline", str(tmp_path / "bl.json"))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_report_flag_writes_json_artifact(tmp_path):
+    bad = tmp_path / "repro" / "core" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\nt = time.time()\n")
+    report = tmp_path / "artifacts" / "report.json"
+    proc = run_cli(str(bad), "--ast-only", "--report", str(report),
+                   "--baseline", str(tmp_path / "bl.json"))
+    assert proc.returncode == 1
+    doc = json.loads(report.read_text())
+    assert set(doc) == {"findings", "new", "grandfathered",
+                        "stale_baseline", "stale_suppressions"}
+    assert [f["rule"] for f in doc["findings"]] == ["SC105"]
+    assert doc["stale_suppressions"] == []

@@ -4,9 +4,9 @@
 PY ?= python
 
 .PHONY: verify lint staticcheck serve-smoke bench-smoke \
-	prefix-cache-smoke platform-serve-smoke dryrun
+	prefix-cache-smoke platform-serve-smoke chaos-smoke dryrun
 
-verify: lint staticcheck platform-serve-smoke prefix-cache-smoke
+verify: lint staticcheck platform-serve-smoke prefix-cache-smoke chaos-smoke
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 # ruff is available in CI; locally the lint step degrades gracefully
@@ -49,6 +49,14 @@ prefix-cache-smoke:
 # to the direct engine run.  Never rewrites BENCH_platform_serve.json.
 platform-serve-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.platform_serve --smoke
+
+# Self-healing chaos gate: scripted FaultPlan injection, one scenario per
+# failure class (OOM, checkpoint corruption, flaky pod, poisoned node,
+# straggler, unknown).  Each must be classified correctly, repaired from
+# the safe list only, and still COMPLETE.  Virtual time — runs in seconds.
+# Never rewrites the checked-in BENCH_chaos.json.
+chaos-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.dependability_fig3 --chaos --smoke
 
 dryrun:
 	PYTHONPATH=src $(PY) -m repro.launch.dryrun --all

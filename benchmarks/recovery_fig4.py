@@ -18,8 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import RunConfig, get_config
-from repro.core import DLaaSPlatform, JobManifest
+from repro.core import DLaaSPlatform
 from repro.core.checkpoint import CheckpointManager
+from repro.core.jobspec import JobSpec, Resources, TrainSpec
 from repro.core.objectstore import ObjectStore
 from repro.data.pipeline import SyntheticLMData
 from repro.models.layers import Ctx
@@ -34,9 +35,12 @@ def measure_component(component: str, trials: int = 5):
     for t in range(trials):
         p = DLaaSPlatform(seed=100 + t)
         p.run(10)
-        h = p.submit(JobManifest(name="r", learners=2, gpus_per_learner=1,
-                                 total_steps=10_000, step_time_s=0.5,
-                                 checkpoint_interval_s=20, max_restarts=50))
+        h = p.submit(JobSpec(
+            name="r",
+            resources=Resources(replicas=2, gpus_per_replica=1),
+            max_restarts=50,
+            train=TrainSpec(total_steps=10_000, step_time_s=0.5,
+                            checkpoint_interval_s=20)))
         p.run(40)           # fully deployed and training
         pod = {"api": "api-0", "lcm": "lcm-0",
                "guardian": f"guardian-{h.job_id}",

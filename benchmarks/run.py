@@ -33,7 +33,16 @@ def main() -> None:
         print("# Fig 3 — dependability fully-armed vs minimal")
         print("=" * 72)
         from benchmarks import dependability_fig3
-        dependability_fig3.main()
+        dependability_fig3.main([])
+
+    print()
+    print("=" * 72)
+    print("# Chaos lane — self-healing Guardian: classify + safe repair "
+          "per failure class")
+    print("=" * 72)
+    from benchmarks import dependability_fig3 as fig3
+    failures_chaos = fig3.main(
+        ["--chaos", "--smoke"] if args.quick else ["--chaos"])
 
     print()
     print("=" * 72)
@@ -69,8 +78,8 @@ def main() -> None:
     from benchmarks import roofline
     roofline.main()
 
-    if failures:
-        sys.exit(1)                  # propagate serve-decode FAIL to CI
+    if failures or failures_chaos:
+        sys.exit(1)                  # propagate lane FAILs to CI
 
 
 if __name__ == "__main__":

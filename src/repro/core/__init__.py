@@ -16,6 +16,14 @@ from repro.core.jobspec import (                       # noqa: F401
     TrainSpec,
 )
 from repro.core.api import InvalidJobState, JobNotFound  # noqa: F401
+from repro.core.failures import (                      # noqa: F401
+    SAFE_REPAIRS,
+    FailureClassifier,
+    FailureReport,
+    Fault,
+    FaultInjector,
+    FaultPlan,
+)
 from repro.core.manifest import JobManifest            # noqa: F401
 from repro.core.platform import DLaaSPlatform          # noqa: F401
 from repro.core.checkpoint import CheckpointManager    # noqa: F401

@@ -167,6 +167,7 @@ class ApiClient:
                 "tenant": doc.get("tenant"),
                 "state": doc["state"],
                 "restarts": doc.get("restarts", 0),
+                "failures_by_category": doc.get("failures_by_category", {}),
                 "learner_states": doc.get("learner_states")}
 
     # v1 alias

@@ -108,6 +108,31 @@ class CheckpointManager:
                 return step
         return None
 
+    def newest_invalid(self) -> Optional[int]:
+        """The newest checkpoint generation, iff it fails integrity.
+
+        This is the classifier's CKPT_CORRUPT evidence: a crashed learner
+        restoring now would skip this generation and silently lose work
+        back to the previous one.
+        """
+        steps = self.steps()
+        if steps and not self._valid(steps[-1]):
+            return steps[-1]
+        return None
+
+    def fallback_one(self) -> Optional[int]:
+        """Safe-list repair for CKPT_CORRUPT: drop exactly one (corrupt)
+        newest generation and return the step to roll the gang back to.
+
+        Deliberately bounded — never deletes a generation that passes
+        integrity, and never walks further back than one generation, so
+        a misclassification cannot destroy good checkpoints.
+        """
+        bad = self.newest_invalid()
+        if bad is not None:
+            self.store.delete_prefix(self._base(bad))
+        return self.latest_valid_step()
+
     def _valid(self, step: int) -> bool:
         base = self._base(step)
         man = self.store.get_json_verified(f"{base}/manifest")

@@ -63,6 +63,7 @@ class Pod:
         pod_transition(self, PENDING)
         self.incarnation = 0
         self.exit_codes: Dict[str, Any] = {}
+        self.exit_detail = ""          # container crash message (evidence)
         self.restarts = 0
         self.started_at: Optional[float] = None
 
@@ -87,7 +88,15 @@ class Pod:
         pod_transition(self, RUNNING)
         self.started_at = sim.now
         self.exit_codes = {}
+        self.exit_detail = ""
         sim.log(f"pod/{self.name} RUNNING on {self.node.name} (inc {inc})")
+        if self.node.poisoned:
+            # poisoned node: every pod placed here dies shortly after
+            # starting, with no diagnostic detail — the classifier must
+            # infer the cause from node co-occurrence, not from the pod
+            sim.schedule(self.cluster.POISON_KILL_DELAY,
+                         lambda inc=inc: self.incarnation == inc and
+                         self.fail())
         for c in self.spec.containers:
             gen = c.proc(self)
             guard = lambda inc=inc: (self.incarnation == inc and
@@ -101,6 +110,7 @@ class Pod:
             return
         self.exit_codes[c.name] = value if not err else f"error:{value}"
         if err:
+            self.exit_detail = str(value)
             self.cluster.sim.log(f"pod/{self.name} container {c.name} crashed: {value}")
             self.fail()
         elif len(self.exit_codes) == len(self.spec.containers):
@@ -121,6 +131,10 @@ class Node:
     name: str
     gpus: int = 8
     alive: bool = True
+    # a poisoned node stays alive and schedulable (the failure is hidden
+    # from the control plane) but kills every pod placed on it — the
+    # §III-f gray-failure mode behind the POISONED_NODE classification
+    poisoned: bool = False
     pods: List[Pod] = field(default_factory=list)
 
     def gpus_free(self) -> int:
@@ -256,6 +270,8 @@ class PodRecord:
     status: str
     started_at: Optional[float]
     finished_at: float
+    node: Optional[str] = None        # where the last incarnation ran
+    exit_detail: str = ""             # crash message (classifier evidence)
 
 
 class Cluster:
@@ -336,7 +352,9 @@ class Cluster:
             del self.pods[uid]
             self.pod_history.append(PodRecord(
                 uid=uid, name=pod.spec.name, status=pod.status,
-                started_at=pod.started_at, finished_at=self.sim.now))
+                started_at=pod.started_at, finished_at=self.sim.now,
+                node=pod.node.name if pod.node is not None else None,
+                exit_detail=pod.exit_detail))
 
     # -- fault injection (kubectl of the paper's Fig. 4) -----------------
     def kubectl_delete_pod(self, name: str) -> bool:
@@ -356,7 +374,29 @@ class Cluster:
     def heal_node(self, node_name: str) -> None:
         node = next(n for n in self.nodes if n.name == node_name)
         node.alive = True
+        node.poisoned = False
         self.sim.log(f"node/{node_name} UP")
+
+    #: poisoned-node kill latency: the pod comes up, then dies
+    POISON_KILL_DELAY = 0.5
+
+    def poison_node(self, node_name: str) -> None:
+        """Gray failure: the node stays alive and schedulable but every
+        pod on it dies shortly after starting (no diagnostic detail)."""
+        node = next(n for n in self.nodes if n.name == node_name)
+        node.poisoned = True
+        self.sim.log(f"node/{node_name} POISONED")
+        for pod in list(node.pods):
+            if pod.status == RUNNING:
+                self.sim.schedule(
+                    self.POISON_KILL_DELAY,
+                    lambda p=pod, inc=pod.incarnation:
+                    p.incarnation == inc and p.fail())
+
+    def cure_node(self, node_name: str) -> None:
+        node = next(n for n in self.nodes if n.name == node_name)
+        node.poisoned = False
+        self.sim.log(f"node/{node_name} CURED")
 
     # -- service RPC ------------------------------------------------------
     def rpc(self, service: str):

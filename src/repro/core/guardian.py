@@ -21,6 +21,7 @@ from typing import Any, Dict, List
 
 from repro.core import states
 from repro.core.cluster import ContainerSpec, Deployment, PodSpec, StatefulSet
+from repro.core.failures import SelfHealer, action_for
 from repro.core.helper import (
     make_controller_proc, make_load_data_proc, make_log_collector_proc,
     make_store_results_proc)
@@ -188,17 +189,135 @@ def _finish(platform, job_id: str, spec: JobSpec, store, update_job,
     platform.tenancy.metering.job_stopped(job_id, platform.sim.now)
 
 
+# ---------------------------------------------------------------------------
+# Self-healing: classify → journal → safe-list repair → per-category budget
+# ---------------------------------------------------------------------------
+def _journal(platform, job_id: str, report):
+    """Journal a FailureReport as a job event (Unavailable-tolerant, same
+    retry discipline as update_job)."""
+    while True:
+        try:
+            states.journal_failure(platform.metadata, platform.sim.now,
+                                   job_id, report.to_doc())
+            return
+        except Unavailable:
+            yield 0.5
+
+
+def _heal_restarts(platform, job_id: str, spec: JobSpec, ss, update_job,
+                   healer: SelfHealer):
+    """Process restart bumps since the last monitor tick: classify each
+    failure from pod-exit evidence, journal the report, apply the safe-list
+    repair (or a plain restart for unknown/low-confidence failures), and
+    charge the restart to its category's budget.
+
+    Returns a FAILED message when some category's budget is exhausted,
+    else None.  Repair-initiated kills (straggler restarts, poisoned-node
+    evictions) were pre-announced via ``healer.expect_restart`` and are
+    not charged; secondary pod deaths of an already-repaired poisoned-node
+    incident are journaled but charged only once per incident.
+    """
+    role = healer.role
+    healer.align(len(ss.restarts_total))
+    for i in range(min(len(ss.restarts_total), len(healer.seen))):
+        while ss.restarts_total[i] > healer.seen[i]:
+            healer.seen[i] += 1
+            healer.total += 1
+            yield from update_job(
+                {"restarts": healer.total},
+                f"{role}-{i} RESTARTED (total restarts {healer.total})")
+            if healer.absorb_expected(i):
+                continue                  # our own kill — not a failure
+            report = healer.classifier.classify(i, restarts=healer.seen[i])
+            yield from _journal(platform, job_id, report)
+            if healer.absorb_poison_incident(report):
+                continue                  # incident already charged+repaired
+            count = healer.charge(report.category)
+            yield from update_job(
+                {"failures_by_category": dict(healer.counts)})
+            if count > healer.budget_for(report.category):
+                return (f"FAILED: {report.category} failures {count} > "
+                        f"budget {healer.budget_for(report.category)}")
+            action, is_repair = action_for(
+                report, healer.policy, healer.min_confidence)
+            if is_repair:
+                yield from _apply_repair(platform, job_id, spec, healer,
+                                         report, action, update_job)
+            else:
+                yield from update_job(
+                    {}, f"RESTART plain (no auto-repair: {report.category}, "
+                        f"confidence {report.confidence:.2f})")
+    return None
+
+
+def _apply_repair(platform, job_id: str, spec: JobSpec, healer: SelfHealer,
+                  report, action: str, update_job):
+    """Apply one registered safe-list action (see failures.SAFE_REPAIRS).
+    Every branch is bounded and reversible-by-restart; nothing here guesses.
+    """
+    vol = platform.volumes.get(f"vol-{job_id}")
+    if action == "reduce_memory":
+        # halve the learner page/memory budget; learners read the knob from
+        # the shared volume on every step
+        if vol is not None:
+            vol.write("repair/mem_scale",
+                      vol.read("repair/mem_scale", 1.0) * 0.5)
+    elif action == "checkpoint_fallback":
+        # drop exactly one (integrity-failed) newest generation and roll
+        # the gang back to the newest valid one
+        from repro.core.checkpoint import CheckpointManager
+        ck = CheckpointManager(platform.objectstore, job_id)
+        target = ck.fallback_one()
+        if vol is not None:
+            epoch = vol.read("rollback_epoch", 0) + 1
+            vol.write("rollback_epoch", epoch)
+            vol.write("rollback_to", {"step": target or 0, "epoch": epoch})
+    elif action == "reschedule_exclude_node":
+        _repair_exclude_node(platform, job_id, report.node, healer)
+        healer.note_poison_repaired(report.node)
+    # restart_in_place: the StatefulSet already recreated the pod with a
+    # fresh identity — the restart itself IS the registered repair
+    yield from update_job(
+        {}, f"REPAIR {action} ({report.category}, pod {report.pod})")
+
+
+def _repair_exclude_node(platform, job_id: str, node: str,
+                         healer: SelfHealer) -> None:
+    """POISONED_NODE repair: exclude ``node`` from this job's placement and
+    evict the job's remaining pods there so their controllers reschedule
+    them elsewhere.  Synchronous on purpose (SC302 node_exclusion provider):
+    no yield can separate the acquire from the evictions, so a Guardian
+    crash cannot leave pods pinned to a node the job just excluded.  The
+    exclusion is held until ``_rollback``'s sweep releases it."""
+    platform.scheduler.exclude_node(job_id, node)
+    prefix = f"{healer.role}-{job_id}-"
+    for pod in list(platform.cluster.pods.values()):
+        if pod.spec.labels.get("job") != job_id:
+            continue
+        if pod.node is None or pod.node.name != node:
+            continue
+        if pod.status not in ("PENDING", "RUNNING"):
+            continue
+        name = pod.spec.name
+        if name.startswith(prefix) and name[len(prefix):].isdigit():
+            healer.expect_restart(int(name[len(prefix):]))
+        pod.fail()
+
+
 def _monitor_train(platform, job_id: str, spec: JobSpec, ss, store,
                    update_job):
-    """Training monitor: elastic DP shrink, straggler detection, restart
-    budget, ETCD→Mongo status aggregation, halt, completion."""
+    """Training monitor: elastic DP shrink, straggler detection, failure
+    classification + safe auto-repair, per-category restart budgets,
+    ETCD→Mongo status aggregation, halt, completion."""
     sim = platform.sim
     cluster = platform.cluster
     from repro.core.elastic import ElasticPolicy
     straggler = StragglerDetector(spec.learners)
     elastic = ElasticPolicy(min_world=1)
-    learner_failures = 0
-    seen_restarts = [0] * spec.learners
+    healer = SelfHealer(platform, job_id, spec, spec.role, spec.learners)
+    tr = spec.train
+    pending_stuck_s = tr.pending_stuck_s if tr is not None else 25.0
+    helper_drain_s = tr.helper_drain_s if tr is not None else 60.0
     last_agg = None
     pending_since: Dict[int, float] = {}
     vol = platform.volumes.get(f"vol-{job_id}")
@@ -214,7 +333,7 @@ def _monitor_train(platform, job_id: str, spec: JobSpec, ss, store,
             for i, p in enumerate(ss.pods[:world]):
                 if p.status == "PENDING":
                     pending_since.setdefault(i, sim.now)
-                    if sim.now - pending_since[i] > 25.0:
+                    if sim.now - pending_since[i] > pending_stuck_s:
                         stuck += 1
                 else:
                     pending_since.pop(i, None)
@@ -248,21 +367,13 @@ def _monitor_train(platform, job_id: str, spec: JobSpec, ss, store,
                                "HALTED", "HALTED by user")
             return 0
 
-        # count learner pod restarts (failure detection by K8S + ss)
-        for i in range(min(len(ss.restarts_total), len(seen_restarts))):
-            if ss.restarts_total[i] > seen_restarts[i]:
-                learner_failures += ss.restarts_total[i] - seen_restarts[i]
-                seen_restarts[i] = ss.restarts_total[i]
-                yield from update_job(
-                    {"restarts": learner_failures},
-                    f"learner-{i} RESTARTED "
-                    f"(total restarts {learner_failures})")
-
-        if learner_failures > spec.max_restarts:
-            yield from _finish(
-                platform, job_id, spec, store, update_job, "FAILED",
-                f"FAILED: restarts {learner_failures} > "
-                f"max_restarts {spec.max_restarts}")
+        # failure detection: classify each restart from pod-exit evidence,
+        # journal it, auto-repair from the safe list, charge its budget
+        fail = yield from _heal_restarts(platform, job_id, spec, ss,
+                                         update_job, healer)
+        if fail:
+            yield from _finish(platform, job_id, spec, store, update_job,
+                               "FAILED", fail)
             return 0
 
         # aggregate learner statuses from ETCD -> Mongo
@@ -273,7 +384,7 @@ def _monitor_train(platform, job_id: str, spec: JobSpec, ss, store,
         if all(s and s["state"] == "SUCCEEDED" for s in sts):
             # let the helper finish log shipping + results upload first
             helper = platform.deployments.get(f"helper-{job_id}")
-            deadline = sim.now + 60.0
+            deadline = sim.now + helper_drain_s
             while helper is not None and not helper.all_succeeded() \
                     and sim.now < deadline:
                 yield 1.0
@@ -287,23 +398,43 @@ def _monitor_train(platform, job_id: str, spec: JobSpec, ss, store,
                 {"learner_states": agg}, f"status: {agg}")
             last_agg = agg
 
-        # straggler detection from heartbeat progress
+        # straggler detection from heartbeat progress; the restart is a
+        # registered repair (restart_in_place), pre-announced so the bump
+        # is absorbed instead of being classified as a fresh failure
         steps_list = [s.get("step") if s else None for s in sts]
         steps_list += [None] * (spec.learners - len(steps_list))
         slow = straggler.update(sim.now, steps_list)
         for i in slow:
+            report = healer.classifier.straggler_report(
+                i, step=steps_list[i] if i < len(steps_list) else None)
+            yield from _journal(platform, job_id, report)
+            count = healer.charge("STRAGGLER")
             yield from update_job(
-                {}, f"learner-{i} STRAGGLER (progress lag); restarting")
+                {"failures_by_category": dict(healer.counts)},
+                f"learner-{i} STRAGGLER (progress lag); restarting")
+            if count > healer.budget_for("STRAGGLER"):
+                yield from _finish(
+                    platform, job_id, spec, store, update_job, "FAILED",
+                    f"FAILED: STRAGGLER failures {count} > "
+                    f"budget {healer.budget_for('STRAGGLER')}")
+                return 0
+            action, is_repair = action_for(
+                report, healer.policy, healer.min_confidence)
+            healer.expect_restart(i)
             cluster.kubectl_delete_pod(f"learner-{job_id}-{i}")
+            if is_repair:
+                yield from update_job(
+                    {}, f"REPAIR {action} ({report.category}, "
+                        f"pod {report.pod})")
 
 
 def _monitor_gang(platform, job_id: str, spec: JobSpec, ss, store,
                   update_job, world: int):
-    """Generic gang monitor for serve/dryrun kinds: halt, restart budget,
-    volume-exit completion, progress surfaced into the job document."""
+    """Generic gang monitor for serve/dryrun kinds: halt, failure
+    classification + per-category restart budgets, volume-exit completion,
+    progress surfaced into the job document."""
     vol = platform.volumes.get(f"vol-{job_id}")
-    failures = 0
-    seen_restarts = [0] * world
+    healer = SelfHealer(platform, job_id, spec, spec.role, world)
     last_note = None
     while True:
         yield MONITOR_PERIOD
@@ -318,19 +449,13 @@ def _monitor_gang(platform, job_id: str, spec: JobSpec, ss, store,
                                "HALTED", "HALTED by user")
             return 0
 
-        # restart budget (K8S recreates crashed replicas in place)
-        for i in range(min(len(ss.restarts_total), world)):
-            if ss.restarts_total[i] > seen_restarts[i]:
-                failures += ss.restarts_total[i] - seen_restarts[i]
-                seen_restarts[i] = ss.restarts_total[i]
-                yield from update_job(
-                    {"restarts": failures},
-                    f"{spec.role}-{i} RESTARTED (total restarts {failures})")
-        if failures > spec.max_restarts:
-            yield from _finish(
-                platform, job_id, spec, store, update_job, "FAILED",
-                f"FAILED: restarts {failures} > "
-                f"max_restarts {spec.max_restarts}")
+        # failure classification + per-category budgets (K8S recreates
+        # crashed replicas in place; every bump is classified + journaled)
+        fail = yield from _heal_restarts(platform, job_id, spec, ss,
+                                         update_job, healer)
+        if fail:
+            yield from _finish(platform, job_id, spec, store, update_job,
+                               "FAILED", fail)
             return 0
 
         # completion: every workload pod wrote its exit file
@@ -405,6 +530,10 @@ def _rollback(platform, job_id, spec, resources):
     _delete_pod_set(platform.statefulsets, f"learners-{job_id}")
     _delete_pod_set(platform.deployments, f"helper-{job_id}")
     _release_gang(platform, job_id, spec)
+    # node exclusions acquired by the POISONED_NODE repair die with the
+    # job (or with the incarnation that held them — a restarted Guardian
+    # re-learns them from fresh evidence if the node is still bad)
+    platform.scheduler.clear_exclusions(job_id)
     platform.netpolicies.pop(job_id, None)
     platform.volumes.release(f"vol-{job_id}")
 

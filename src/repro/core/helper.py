@@ -40,7 +40,6 @@ def make_controller_proc(platform, job_id: str, spec: JobSpec):
         vol = platform.volumes.get(f"vol-{job_id}")
         store = platform.statestore
         stale_after = 3.0 * spec.step_time_s + 2.0
-        rb_epoch = vol.read("rollback_epoch", 0)
         was_unreachable = False
 
         while True:
@@ -83,7 +82,11 @@ def make_controller_proc(platform, job_id: str, spec: JobSpec):
                     from repro.core.checkpoint import CheckpointManager
                     ck = CheckpointManager(platform.objectstore, job_id)
                     target = ck.latest_valid_step() or 0
-                    rb_epoch += 1
+                    # re-read per incident: the Guardian's checkpoint-
+                    # fallback repair also bumps this counter, and a stale
+                    # cached value here would reuse its epoch (learners
+                    # would ack one rollback and skip the other)
+                    rb_epoch = vol.read("rollback_epoch", 0) + 1
                     vol.write("rollback_epoch", rb_epoch)
                     vol.write("rollback_to", {"step": target, "epoch": rb_epoch})
                     vol.append("log/controller",

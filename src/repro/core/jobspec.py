@@ -65,6 +65,17 @@ class TrainSpec:
     result_location: str = "cos://results"
     real_compute: bool = False                # run actual JAX steps
     recovery_mode: str = "checkpoint"         # checkpoint | rejoin (§III-h)
+    # self-healing Guardian knobs (failure classification + safe repair).
+    # restart_budgets charges restarts per failure category (keys from
+    # states.FAILURE_CATEGORIES); categories without an entry fall back to
+    # the envelope's max_restarts, so one pathology cannot exhaust
+    # another's budget.
+    restart_budgets: Dict[str, int] = field(default_factory=dict)
+    repair_policy: str = "auto"               # auto | restart-only
+    min_repair_confidence: float = 0.6        # below this: plain restart
+    # formerly hard-coded Guardian monitor thresholds
+    pending_stuck_s: float = 25.0             # elastic shrink trigger
+    helper_drain_s: float = 60.0              # helper log/results drain
 
 
 @dataclass(frozen=True)
@@ -264,6 +275,22 @@ class JobSpec:
                 return "train.step_time_s must be > 0"
             if w.checkpoint_interval_s <= 0:
                 return "train.checkpoint_interval_s must be > 0"
+            if w.repair_policy not in ("auto", "restart-only"):
+                return (f"train.repair_policy {w.repair_policy!r} must be "
+                        f"'auto' or 'restart-only'")
+            if not 0.0 <= w.min_repair_confidence <= 1.0:
+                return "train.min_repair_confidence must be in [0, 1]"
+            if w.pending_stuck_s <= 0:
+                return "train.pending_stuck_s must be > 0"
+            if w.helper_drain_s <= 0:
+                return "train.helper_drain_s must be > 0"
+            from repro.core.states import FAILURE_CATEGORIES
+            for cat, budget in w.restart_budgets.items():
+                if cat not in FAILURE_CATEGORIES:
+                    return (f"train.restart_budgets: unknown category "
+                            f"{cat!r}; known: {list(FAILURE_CATEGORIES)}")
+                if budget < 0:
+                    return (f"train.restart_budgets[{cat!r}] must be >= 0")
         elif self.kind == "serve":
             if w.batch < 1:
                 return "serve.batch must be >= 1"

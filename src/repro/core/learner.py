@@ -72,6 +72,11 @@ def make_learner_proc(platform, job_id: str, spec: JobSpec, idx: int):
         # this pod drives real compute or stays virtual-time
         payload = platform.frameworks.get(spec.framework).payload(
             platform, job_id, spec)
+        # chaos seam: the platform's FaultInjector gates each step (OOM,
+        # wedge) and scales this incarnation's step time (straggler)
+        faults = getattr(platform, "faults", None)
+        slow = faults.incarnation_factor(job_id, idx) \
+            if faults is not None else 1.0
 
         # -- wait for load-data helper ------------------------------------
         while not vol.read("data_ready"):
@@ -106,6 +111,13 @@ def make_learner_proc(platform, job_id: str, spec: JobSpec, idx: int):
                         step = 0
             vol.append(f"log/{idx}", f"[{sim.now:.2f}] rejoined at step {step}")
         else:
+            bad = ckpt.newest_invalid()
+            if bad is not None:
+                # restore evidence for the FailureClassifier: the newest
+                # generation failed integrity and is being skipped
+                vol.append(f"log/{idx}",
+                           f"[{sim.now:.2f}] checkpoint step {bad} failed "
+                           f"integrity; falling back")
             loaded = ckpt.load()
             if loaded is not None:
                 step = int(loaded[0])
@@ -121,6 +133,8 @@ def make_learner_proc(platform, job_id: str, spec: JobSpec, idx: int):
 
         # -- train loop ---------------------------------------------------------
         while step < spec.total_steps:
+            if faults is not None:      # armed faults crash the pod here
+                faults.learner_gate(job_id, idx, step, vol)
             # group rollback marker (checkpoint-mode recovery)
             rb = vol.read("rollback_to")
             if rb is not None and rb.get("epoch", -1) > \
@@ -163,7 +177,7 @@ def make_learner_proc(platform, job_id: str, spec: JobSpec, idx: int):
             if payload is not None:
                 loss = payload.step(step)
                 vol.write("last_loss", loss)
-            yield spec.step_time_s
+            yield spec.step_time_s * slow
             step += 1
             vol.write(f"progress/{idx}", {"step": step, "t": sim.now})
             if payload is not None and idx == 0 and \

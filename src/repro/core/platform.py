@@ -16,6 +16,7 @@ from typing import Any, Dict, List, Optional
 
 from repro.core.api import ApiClient, SubmitHandle, make_api_proc
 from repro.core.cluster import Cluster, ContainerSpec, Deployment, PodSpec
+from repro.core.failures import FaultInjector, FaultPlan
 from repro.core.jobspec import FrameworkRegistry, JobSpec
 from repro.core.lcm import make_lcm_proc
 from repro.core.manifest import JobManifest
@@ -50,6 +51,9 @@ class DLaaSPlatform:
         # framework-adapter registry: one adapter per architecture by
         # default; register() more to plug in new frameworks (Job API v2)
         self.frameworks = FrameworkRegistry.default()
+        # chaos injection as a first-class API: scripted, typed, replayable
+        # fault plans (see core/failures.py and the chaos benchmark lane)
+        self.faults = FaultInjector(self)
 
         # mutable registries
         self.api_queue: List[SubmitHandle] = []
@@ -105,6 +109,10 @@ class DLaaSPlatform:
         self.payloads[job_id] = payload
 
     # -- fault injection -------------------------------------------------------
+    def inject(self, plan: FaultPlan) -> None:
+        """Arm a scripted chaos plan (typed faults at absolute sim times)."""
+        self.faults.arm(plan)
+
     def kill_pod(self, name: str) -> bool:
         return self.cluster.kubectl_delete_pod(name)
 

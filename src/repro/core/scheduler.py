@@ -6,6 +6,8 @@ fragmentation; spread across nodes is available for fault-domain diversity.
 """
 from __future__ import annotations
 
+from typing import Dict, FrozenSet
+
 # Unschedulable is defined next to the retry loop that catches it and
 # re-exported here for its historical import path.
 from repro.core.cluster import Cluster, Node, PodSpec, Unschedulable
@@ -16,11 +18,28 @@ class Scheduler:
     def __init__(self, tenancy: TenancyManager, strategy: str = "binpack"):
         self.tenancy = tenancy
         self.strategy = strategy
+        # per-job node exclusions (POISONED_NODE repair).  Guardian-owned:
+        # acquired only through the `_repair_exclude_node` provider and
+        # swept by `_rollback` — the SC302 node_exclusion pair checks that
+        # an exclusion can never leak past the job that acquired it.
+        self._excluded: Dict[str, FrozenSet[str]] = {}
+
+    # -- node exclusion (self-healing repair: reschedule off a node) ----
+    def exclude_node(self, job_id: str, node: str) -> None:
+        self._excluded[job_id] = \
+            self._excluded.get(job_id, frozenset()) | {node}
+
+    def clear_exclusions(self, job_id: str) -> None:
+        self._excluded.pop(job_id, None)
+
+    def excluded_for(self, job_id: str) -> FrozenSet[str]:
+        return self._excluded.get(job_id, frozenset())
 
     # per-pod placement hook used by Cluster._create_pod
     def place(self, cluster: Cluster, spec: PodSpec) -> Node:
+        excluded = self._excluded.get(spec.labels.get("job"), frozenset())
         nodes = [n for n in cluster.nodes if n.alive and
-                 n.gpus_free() >= spec.gpus]
+                 n.name not in excluded and n.gpus_free() >= spec.gpus]
         if not nodes:
             raise Unschedulable(f"no node fits pod {spec.name} "
                                 f"({spec.gpus} GPUs)")

@@ -49,6 +49,13 @@ class Sim:
         heapq.heappush(self._heap, ev)
         return ev
 
+    def at(self, t: float, fn: Callable, *args, **kw) -> _Event:
+        """Schedule at an *absolute* virtual time (the FaultPlan seam):
+        scripted fault injection declares event times, not delays, so a
+        plan replays identically regardless of when it is armed.  Times
+        already in the past fire on the next dispatch."""
+        return self.schedule(t - self.now, fn, *args, **kw)
+
     def cancel(self, ev: _Event) -> None:
         ev.cancelled = True
 

@@ -95,6 +95,52 @@ POD = StateMachine(
     terminal=("SUCCEEDED", "FAILED"),
 )
 
+# Failure-classification vocabulary (self-healing Guardian).  The
+# FailureClassifier (core/failures.py) may only emit these categories;
+# ``journal_failure`` validates reports the same way ``job_transition``
+# validates states, so a typo'd category can never reach the journal.
+FAILURE_CATEGORIES = (
+    "OOM",              # learner memory/page budget exceeded (exit 137)
+    "CKPT_CORRUPT",     # newest checkpoint generation fails integrity
+    "FLAKY_POD",        # one-shot pod crash, no deeper signature
+    "POISONED_NODE",    # co-occurring pod deaths on one live node
+    "STRAGGLER",        # alive but lagging the gang (gray failure)
+    "UNKNOWN",          # unrecognized evidence — never auto-repaired
+)
+
+
+def journal_failure(
+    metadata: Any,
+    now: float,
+    job_id: str,
+    report: Dict[str, Any],
+) -> None:
+    """Journal a validated FailureReport doc as a job event.
+
+    The event carries no ``state`` key — classification never moves the
+    lifecycle machine by itself; repairs and budget exhaustion go through
+    ``job_transition`` like every other write.
+    """
+    category = report.get("category")
+    if category not in FAILURE_CATEGORIES:
+        raise InvalidTransition(
+            f"failure: unknown category {category!r} "
+            f"(vocabulary: {list(FAILURE_CATEGORIES)})"
+        )
+    confidence = float(report.get("confidence", 0.0))
+    if not 0.0 <= confidence <= 1.0:
+        raise InvalidTransition(
+            f"failure: confidence {confidence!r} outside [0, 1]"
+        )
+    metadata.append_event(
+        "jobs", job_id,
+        {"t": now,
+         "event": f"FAILURE {category} "
+                  f"(confidence {confidence:.2f}, pod {report.get('pod')})",
+         "failure": dict(report)},
+    )
+
+
 # Learner status vocabulary as reported by the helper controller.
 # UNKNOWN is synthetic: the aggregator's placeholder for a learner with
 # no status doc yet.

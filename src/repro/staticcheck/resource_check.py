@@ -101,6 +101,20 @@ PAIRS: Tuple[ResourcePair, ...] = (
         crash_safe=True,            # time-bounded: stale leases expire
         paths=("core/learner.py",),
     ),
+    # per-job scheduler node exclusions (POISONED_NODE self-healing
+    # repair): acquired only inside the `_repair_exclude_node` provider —
+    # synchronous, so a Guardian crash cannot strand a half-applied
+    # exclusion — and swept by `_rollback`/`_teardown` via
+    # `clear_exclusions`.  The scheduler's own `_excluded` dict is the
+    # durable store teardown reads (escape).
+    ResourcePair(
+        name="node_exclusion",
+        acquires=("exclude_node",),
+        releases=("clear_exclusions",),
+        escape_stores=("_excluded",),
+        providers=("_repair_exclude_node",),
+        paths=("core/scheduler.py", "core/guardian.py"),
+    ),
 )
 
 

@@ -1,0 +1,341 @@
+"""Self-healing Guardian: classification, safe repairs, per-category budgets.
+
+Unit layer: FailureClassifier evidence rules against a stub platform,
+the safe-repair registry contract, journal validation, the bounded
+checkpoint fallback, and scheduler node exclusions.  End-to-end layer:
+per-category restart budgets are genuinely independent — a flaky-pod
+storm cannot exhaust the OOM budget and vice versa.
+"""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import DLaaSPlatform
+from repro.core.checkpoint import CheckpointManager
+from repro.core.cluster import PodRecord
+from repro.core.failures import (
+    OOM_SIGNATURE, SAFE_REPAIRS, FailureClassifier, FailureReport, Fault,
+    FaultPlan, SelfHealer, action_for,
+)
+from repro.core.jobspec import JobSpec, Resources, TrainSpec
+from repro.core.objectstore import ObjectStore
+from repro.core.states import InvalidTransition, journal_failure
+
+
+# ---------------------------------------------------------------------------
+# stubs for classifier unit tests (no platform boot needed)
+# ---------------------------------------------------------------------------
+def _stub_platform(records=(), nodes=(), now=100.0, store=None):
+    return SimpleNamespace(
+        cluster=SimpleNamespace(pod_history=list(records), nodes=list(nodes)),
+        sim=SimpleNamespace(now=now),
+        statestore=SimpleNamespace(try_get=lambda key: None),
+        objectstore=store if store is not None else ObjectStore(),
+    )
+
+
+def _rec(name, node="node-0", detail="", finished=95.0):
+    return PodRecord(uid=name, name=name, status="FAILED", started_at=50.0,
+                     finished_at=finished, node=node, exit_detail=detail)
+
+
+def _node(name="node-0", alive=True):
+    return SimpleNamespace(name=name, alive=alive)
+
+
+SERVE_SPEC = SimpleNamespace(kind="serve")
+
+
+# ---------------------------------------------------------------------------
+# FailureClassifier: one test per evidence rule
+# ---------------------------------------------------------------------------
+def test_classifies_oom_from_exit_signature():
+    p = _stub_platform([_rec("learner-j-0", detail=OOM_SIGNATURE)],
+                       [_node()])
+    r = FailureClassifier(p, "j", SERVE_SPEC).classify(0)
+    assert r.category == "OOM" and r.confidence >= 0.9
+    assert OOM_SIGNATURE in r.evidence["exit_detail"]
+
+
+def test_classifies_flaky_pod_from_detail_free_crash():
+    p = _stub_platform([_rec("learner-j-0")], [_node()])
+    r = FailureClassifier(p, "j", SERVE_SPEC).classify(0)
+    assert r.category == "FLAKY_POD"
+
+
+def test_classifies_unknown_from_unrecognized_detail():
+    p = _stub_platform([_rec("learner-j-0", detail="status 139 (segfault?)")],
+                       [_node()])
+    r = FailureClassifier(p, "j", SERVE_SPEC).classify(0)
+    assert r.category == "UNKNOWN"
+    assert r.confidence < 0.6          # never clears the repair threshold
+
+
+def test_classifies_poisoned_node_from_co_occurrence():
+    recs = [_rec("learner-j-0"), _rec("learner-j-1")]
+    p = _stub_platform(recs, [_node()])
+    r = FailureClassifier(p, "j", SERVE_SPEC).classify(0)
+    assert r.category == "POISONED_NODE" and r.node == "node-0"
+    assert r.evidence["co_failed"] == ["learner-j-0", "learner-j-1"]
+
+
+def test_dead_node_is_not_poisoned():
+    # a dead node is the scheduler's problem; co-occurrence on it must
+    # not trigger the exclusion repair
+    recs = [_rec("learner-j-0"), _rec("learner-j-1")]
+    p = _stub_platform(recs, [_node(alive=False)])
+    r = FailureClassifier(p, "j", SERVE_SPEC).classify(0)
+    assert r.category == "FLAKY_POD"
+
+
+def test_stale_co_failures_outside_window_ignored():
+    recs = [_rec("learner-j-0", finished=95.0),
+            _rec("learner-j-1", finished=95.0 - 500.0)]
+    p = _stub_platform(recs, [_node()], now=100.0)
+    r = FailureClassifier(p, "j", SERVE_SPEC).classify(0)
+    assert r.category == "FLAKY_POD"
+
+
+def test_classifies_ckpt_corrupt_from_invalid_newest_generation():
+    store = ObjectStore()
+    ck = CheckpointManager(store, "j")
+    ck.save(10, {"w": np.arange(8.0)})
+    for path in store.list_prefix(f"ckpt/j/{10:012d}/blob/"):
+        store.corrupt(path)
+    p = _stub_platform([_rec("learner-j-0")], [_node()], store=store)
+    spec = SimpleNamespace(kind="train")
+    r = FailureClassifier(p, "j", spec).classify(0)
+    assert r.category == "CKPT_CORRUPT"
+    assert r.evidence["corrupt_step"] == 10
+
+
+def test_straggler_report_carries_detector_evidence():
+    p = _stub_platform()
+    r = FailureClassifier(p, "j", SERVE_SPEC).straggler_report(
+        2, lag_factor=0.5)
+    assert r.category == "STRAGGLER" and r.learner == 2
+    assert r.evidence["detector"] == "progress-lag"
+
+
+# ---------------------------------------------------------------------------
+# safe-repair registry contract
+# ---------------------------------------------------------------------------
+def test_unknown_has_no_registered_repair():
+    assert "UNKNOWN" not in SAFE_REPAIRS
+    action, is_repair = action_for(FailureReport("UNKNOWN", 0.3))
+    assert action == "restart" and not is_repair
+
+
+def test_low_confidence_falls_back_to_plain_restart():
+    action, is_repair = action_for(FailureReport("OOM", 0.4))
+    assert action == "restart" and not is_repair
+
+
+def test_restart_only_policy_never_repairs():
+    action, is_repair = action_for(FailureReport("OOM", 0.95),
+                                   policy="restart-only")
+    assert action == "restart" and not is_repair
+
+
+def test_auto_policy_resolves_registered_repairs():
+    for cat, expected in SAFE_REPAIRS.items():
+        action, is_repair = action_for(FailureReport(cat, 0.9))
+        assert (action, is_repair) == (expected, True), cat
+
+
+# ---------------------------------------------------------------------------
+# journal validation (same contract as job_transition)
+# ---------------------------------------------------------------------------
+class _Journal:
+    def __init__(self):
+        self.events = []
+
+    def append_event(self, coll, key, doc):
+        self.events.append(doc)
+
+
+def test_journal_failure_rejects_unknown_category():
+    with pytest.raises(InvalidTransition):
+        journal_failure(_Journal(), 1.0, "j",
+                        {"category": "GREMLINS", "confidence": 0.9})
+
+
+def test_journal_failure_rejects_out_of_range_confidence():
+    with pytest.raises(InvalidTransition):
+        journal_failure(_Journal(), 1.0, "j",
+                        {"category": "OOM", "confidence": 1.5})
+
+
+def test_journal_failure_never_writes_a_state_key():
+    j = _Journal()
+    journal_failure(j, 1.0, "j", FailureReport("OOM", 0.95,
+                                               pod="learner-j-0").to_doc())
+    (doc,) = j.events
+    assert "state" not in doc            # classification moves no machine
+    assert doc["failure"]["category"] == "OOM"
+    assert "FAILURE OOM" in doc["event"]
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan validation
+# ---------------------------------------------------------------------------
+def test_fault_plan_validation():
+    assert FaultPlan((Fault(kind="oom", job="j"),)).validate() is None
+    assert FaultPlan((Fault(kind="gremlin", job="j"),)).validate()
+    assert FaultPlan((Fault(kind="flaky_pod"),)).validate()   # no target
+    assert FaultPlan((Fault(kind="straggler", job="j",
+                            slow_factor=1.0),)).validate()
+
+
+def test_platform_inject_rejects_invalid_plan():
+    p = DLaaSPlatform(seed=9)
+    with pytest.raises(ValueError):
+        p.inject(FaultPlan((Fault(kind="gremlin", job="j"),)))
+
+
+# ---------------------------------------------------------------------------
+# bounded checkpoint fallback (the CKPT_CORRUPT repair primitive)
+# ---------------------------------------------------------------------------
+def test_fallback_one_deletes_only_the_corrupt_newest_generation():
+    store = ObjectStore()
+    ck = CheckpointManager(store, "fb")
+    ck.save(10, {"w": np.arange(8.0)})
+    ck.save(20, {"w": np.arange(8.0) + 1})
+    for path in store.list_prefix(f"ckpt/fb/{20:012d}/blob/"):
+        store.corrupt(path)
+    assert ck.newest_invalid() == 20
+    assert ck.fallback_one() == 10
+    assert ck.steps() == [10]
+    # idempotent: with everything valid it deletes nothing
+    assert ck.newest_invalid() is None
+    assert ck.fallback_one() == 10
+    assert ck.steps() == [10]
+
+
+# ---------------------------------------------------------------------------
+# scheduler node exclusions (the POISONED_NODE repair primitive)
+# ---------------------------------------------------------------------------
+def test_scheduler_exclusions_are_per_job_and_clearable():
+    p = DLaaSPlatform(seed=7)
+    p.run(5)
+    p.scheduler.exclude_node("j1", "node-0")
+    assert p.scheduler.excluded_for("j1") == frozenset({"node-0"})
+    assert p.scheduler.excluded_for("j2") == frozenset()
+    p.scheduler.clear_exclusions("j1")
+    assert p.scheduler.excluded_for("j1") == frozenset()
+
+
+# ---------------------------------------------------------------------------
+# SelfHealer bookkeeping
+# ---------------------------------------------------------------------------
+def _healer(budgets=None, policy="auto"):
+    spec = SimpleNamespace(
+        kind="train", max_restarts=5,
+        train=SimpleNamespace(restart_budgets=budgets or {},
+                              repair_policy=policy,
+                              min_repair_confidence=0.6))
+    return SelfHealer(_stub_platform(), "j", spec, "learner", n=2)
+
+
+def test_budget_falls_back_to_max_restarts():
+    h = _healer(budgets={"OOM": 1})
+    assert h.budget_for("OOM") == 1
+    assert h.budget_for("FLAKY_POD") == 5
+
+
+def test_charges_accumulate_per_category():
+    h = _healer()
+    assert h.charge("FLAKY_POD") == 1
+    assert h.charge("FLAKY_POD") == 2
+    assert h.charge("OOM") == 1          # independent counter
+    with pytest.raises(ValueError):
+        h.charge("GREMLINS")
+
+
+def test_expected_restarts_are_absorbed_once():
+    h = _healer()
+    h.expect_restart(1)
+    assert h.absorb_expected(1)
+    assert not h.absorb_expected(1)
+    assert not h.absorb_expected(0)
+
+
+def test_poison_incident_dedup_window():
+    h = _healer()
+    rep = FailureReport("POISONED_NODE", 0.85, node="node-3")
+    assert not h.absorb_poison_incident(rep)
+    h.note_poison_repaired("node-3")
+    assert h.absorb_poison_incident(rep)
+    h.platform.sim.now += SelfHealer.POISON_INCIDENT_S + 1
+    assert not h.absorb_poison_incident(rep)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: per-category budgets are independent
+# ---------------------------------------------------------------------------
+def _submit_train(p, *, budgets, policy="auto", total_steps=400):
+    h = p.submit(JobSpec(
+        name="budget",
+        resources=Resources(replicas=2, gpus_per_replica=1),
+        max_restarts=50,
+        train=TrainSpec(total_steps=total_steps, step_time_s=0.5,
+                        checkpoint_interval_s=15.0,
+                        restart_budgets=budgets, repair_policy=policy)))
+    p.run(5)
+    assert h.acked and h.job_id
+    return h
+
+
+def test_flaky_storm_exhausts_only_the_flaky_budget():
+    """Repeated detail-free kills charge FLAKY_POD, never OOM; the job
+    fails naming FLAKY_POD once ITS budget (2) is exceeded — nowhere near
+    the envelope max_restarts of 50."""
+    p = DLaaSPlatform(seed=21)
+    p.run(10)
+    h = _submit_train(p, budgets={"FLAKY_POD": 2, "OOM": 50})
+    for _ in range(4):
+        p.run(30)
+        p.kill_pod(f"learner-{h.job_id}-0")
+    assert p.run_until_terminal(h.job_id, timeout=600) == "FAILED"
+    doc = p.client.status(h.job_id)
+    by_cat = doc.get("failures_by_category", {})
+    assert by_cat.get("FLAKY_POD", 0) == 3       # budget 2 + the fatal one
+    assert by_cat.get("OOM", 0) == 0
+    ev = [e["event"] for e in p.client.events(h.job_id)]
+    assert any(e.startswith("FAILED: FLAKY_POD") for e in ev), ev
+
+
+def test_oom_loop_exhausts_only_the_oom_budget():
+    """Under restart-only policy nothing lowers the memory knob, so the
+    armed OOM gate refires every incarnation: OOM budget (2) exhausts
+    while the generous FLAKY_POD budget is untouched."""
+    p = DLaaSPlatform(seed=22)
+    p.run(10)
+    h = _submit_train(p, budgets={"OOM": 2, "FLAKY_POD": 50},
+                      policy="restart-only")
+    p.inject(FaultPlan((Fault(kind="oom", at=p.sim.now, job=h.job_id,
+                              learner=0, at_step=5),)))
+    assert p.run_until_terminal(h.job_id, timeout=600) == "FAILED"
+    doc = p.client.status(h.job_id)
+    by_cat = doc.get("failures_by_category", {})
+    assert by_cat.get("OOM", 0) == 3
+    assert by_cat.get("FLAKY_POD", 0) == 0
+    ev = [e["event"] for e in p.client.events(h.job_id)]
+    assert any(e.startswith("FAILED: OOM") for e in ev), ev
+    # restart-only: the safe-list repair must never have been applied
+    assert not any(e.startswith("REPAIR ") for e in ev), ev
+
+
+def test_oom_auto_repair_completes_within_budget():
+    """With auto policy the reduce_memory repair halves the knob past the
+    gate's clearing threshold, so the same fault that kills the
+    restart-only job lets this one COMPLETE."""
+    p = DLaaSPlatform(seed=23)
+    p.run(10)
+    h = _submit_train(p, budgets={"OOM": 5}, total_steps=40)
+    p.inject(FaultPlan((Fault(kind="oom", at=p.sim.now, job=h.job_id,
+                              learner=0, at_step=5),)))
+    assert p.run_until_terminal(h.job_id, timeout=600) == "COMPLETED"
+    ev = [e["event"] for e in p.client.events(h.job_id)]
+    assert any("REPAIR reduce_memory" in e for e in ev), ev

@@ -286,3 +286,48 @@ def test_sc302_save_lease_released_is_clean(tmp_path):
             vol.write(f"progress/{idx}", {"step": step, "t": sim.now})
     """)
     assert resource_check.check(root=root) == []
+
+
+# ---------------------------------------------------------------------------
+# SC302: per-job scheduler node exclusions (self-healing reschedule repair)
+# ---------------------------------------------------------------------------
+def test_sc302_flags_node_exclusion_held_across_yield(tmp_path):
+    # mutation: a non-provider Guardian path excludes the poisoned node,
+    # then yields before anything durable records it — a crash at that
+    # yield strands the exclusion with no sweep pointed at it
+    root = _core_tree(tmp_path, "guardian.py", """\
+        def repair(platform, job_id, node, update_job):
+            platform.scheduler.exclude_node(job_id, node)
+            yield from update_job({}, "REPAIR reschedule_exclude_node")
+    """)
+    fs = resource_check.check(root=root)
+    assert any("node_exclusion" in f.message and "held across" in f.message
+               for f in fs), [f.message for f in fs]
+
+
+def test_sc302_flags_node_exclusion_leaked_on_exit(tmp_path):
+    # mutation: an undeclared function acquires an exclusion and returns
+    # still holding it — only the `_repair_exclude_node` provider may do
+    # that (teardown's clear_exclusions sweep is its counterpart)
+    root = _core_tree(tmp_path, "guardian.py", """\
+        def quarantine(platform, job_id, node):
+            platform.scheduler.exclude_node(job_id, node)
+            return True
+    """)
+    fs = resource_check.check(root=root)
+    assert any("node_exclusion" in f.message and "normal exit" in f.message
+               for f in fs), [f.message for f in fs]
+
+
+def test_sc302_node_exclusion_provider_and_sweep_are_clean(tmp_path):
+    # positive control: the live shape — the synchronous provider exits
+    # holding (declared), and the rollback sweep releases per job
+    root = _core_tree(tmp_path, "guardian.py", """\
+        def _repair_exclude_node(platform, job_id, node):
+            platform.scheduler.exclude_node(job_id, node)
+
+        def _rollback(platform, job_id):
+            platform.scheduler.clear_exclusions(job_id)
+            yield 0.0
+    """)
+    assert resource_check.check(root=root) == []

@@ -1,0 +1,81 @@
+"""StragglerDetector unit tests: boundary semantics of the lag detector
+that feeds the Guardian's STRAGGLER reports (rejoin-mode recovery)."""
+from repro.core.recovery import StragglerDetector
+
+
+def _feed(det, t0, rows, window=10.0):
+    """Feed one row per window tick; returns the flagged lists."""
+    out = []
+    for k, row in enumerate(rows):
+        out.append(det.update(t0 + k * window, list(row)))
+    return out
+
+
+def test_needs_three_learners_to_judge():
+    det = StragglerDetector(2)
+    assert _feed(det, 0.0, [(0, 0)] * 10) == [[]] * 10
+
+
+def test_flags_after_patience_consecutive_lagging_windows():
+    det = StragglerDetector(4, lag_factor=0.5, patience=3)
+    # peers advance 20/window, learner 3 advances 5 (< 0.5 * median)
+    rows = [(20 * k, 20 * k, 20 * k, 5 * k) for k in range(5)]
+    flagged = _feed(det, 0.0, rows)
+    assert flagged[:3] == [[], [], []]      # first row seeds; strikes 1, 2
+    assert flagged[3] == [3]                # third strike: flag + reset
+    assert flagged[4] == []                 # strikes restart from zero
+
+
+def test_lag_factor_boundary_is_strict():
+    # delta exactly at lag_factor * median is NOT lagging (strict <)
+    det = StragglerDetector(4, lag_factor=0.5, patience=1)
+    rows = [(20 * k, 20 * k, 20 * k, 10 * k) for k in range(4)]
+    assert _feed(det, 0.0, rows) == [[]] * 4
+    det = StragglerDetector(4, lag_factor=0.5, patience=1)
+    rows = [(20 * k, 20 * k, 20 * k, 9 * k) for k in range(4)]
+    assert _feed(det, 0.0, rows)[1:] == [[3]] * 3
+
+
+def test_all_none_steps_never_flag():
+    det = StragglerDetector(4)
+    assert _feed(det, 0.0, [(None,) * 4] * 6) == [[]] * 6
+
+
+def test_unknown_learner_is_not_judged():
+    # a restarting learner reports None — no strike either way
+    det = StragglerDetector(4, patience=1)
+    rows = [(20 * k, 20 * k, 20 * k, None) for k in range(4)]
+    assert _feed(det, 0.0, rows) == [[]] * 4
+
+
+def test_whole_group_stall_is_not_a_straggler():
+    det = StragglerDetector(4, patience=1)
+    rows = [(7, 7, 7, 3)] * 5               # nobody advances: median 0
+    assert _feed(det, 0.0, rows) == [[]] * 5
+
+
+def test_recovered_learner_resets_strikes():
+    det = StragglerDetector(4, lag_factor=0.5, patience=3)
+    flagged = []
+    steps = [0, 0, 0, 0]
+    rates = [(20, 20, 20, 5),               # 2 lagging windows (strikes 1, 2)
+             (20, 20, 20, 5),
+             (20, 20, 20, 20),              # recovery window: strikes reset
+             (20, 20, 20, 5),               # lagging resumes: strikes 1, 2, 3
+             (20, 20, 20, 5),
+             (20, 20, 20, 5)]
+    det.update(0.0, steps)                  # seed
+    for k, rate in enumerate(rates):
+        steps = [s + r for s, r in zip(steps, rate)]
+        flagged.append(det.update(10.0 * (k + 1), list(steps)))
+    # without the reset the flag would fire at index 3; with it, index 5
+    assert flagged == [[], [], [], [], [], [3]]
+
+
+def test_sub_window_updates_are_ignored():
+    det = StragglerDetector(4, patience=1)
+    det.update(0.0, [0, 0, 0, 0])
+    # 5s later (< window_s): no evaluation, no state clobber
+    assert det.update(5.0, [10, 10, 10, 1]) == []
+    # full window from seed: learner 3 lagging vs median 20
+    assert det.update(10.0, [20, 20, 20, 2]) == [3]

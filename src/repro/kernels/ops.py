@@ -13,7 +13,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention as _flash
-from repro.kernels.paged_attention import paged_decode_attention as _paged
+from repro.kernels.paged_attention import (
+    mla_paged_decode_attention as _mla_paged,
+    paged_decode_attention as _paged,
+)
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 from repro.kernels.rwkv6_wkv import wkv6 as _wkv6
 
@@ -69,6 +72,24 @@ def paged_decode_bhd(
                  pos_q.astype(jnp.int32), scale=scale, logit_cap=logit_cap,
                  interpret=_interpret())
     return out.reshape(B, 1, H, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def mla_paged_decode_bhd(
+    q_lat: jax.Array,        # (B, H, lora + rd) absorbed latent query
+    ckv_pages: jax.Array,    # (P, ps, lora) shared latent pool
+    krope_pages: jax.Array,  # (P, ps, rd) shared rope-key pool
+    page_table: jax.Array,   # (B, pps) int32; -1 = unallocated
+    pos_q: jax.Array,        # (B,) int32; -1 = inactive slot
+    *,
+    scale: float,
+) -> jax.Array:
+    """Model-layout wrapper for the MLA latent flash-decode kernel;
+    returns the latent context (B, H, lora) — the caller expands it
+    through W_vc (interpret mode off-TPU)."""
+    return _mla_paged(q_lat, ckv_pages, krope_pages,
+                      page_table.astype(jnp.int32), pos_q.astype(jnp.int32),
+                      scale=scale, interpret=_interpret())
 
 
 @jax.jit

@@ -235,7 +235,8 @@ def _copy_pool_pages(cache, pairs: List[Tuple[int, int]]):
     leaves, treedef = jax.tree_util.tree_flatten_with_path(cache)
     out = []
     for path, leaf in leaves:
-        if getattr(path[-1], "key", None) in ("k_pages", "v_pages"):
+        if getattr(path[-1], "key", None) in ("k_pages", "v_pages",
+                                              "ckv_pages", "krope_pages"):
             ax = 1 if any(getattr(p, "key", None) == "groups"
                           for p in path) else 0
             vals = jnp.take(leaf, srcs, axis=ax)
@@ -279,7 +280,7 @@ class ServingEngine:
     def __init__(self, cfg, ctx, params, sv: ServeSpec):
         import jax.numpy as jnp  # noqa: F401  (fail fast without jax)
 
-        from repro.configs.base import GLOBAL_ATTN, LOCAL_ATTN
+        from repro.configs.base import GLOBAL_ATTN
         from repro.models.model import init_cache, num_pages
         from repro.train.steps import make_serve_steps
 
@@ -288,16 +289,17 @@ class ServingEngine:
         # run_continuous maps them to SystemExit for the CLI
         if cfg.cache_layout != "paged":
             raise ValueError("--continuous requires --layout paged")
-        if cfg.use_mla or cfg.is_encoder_decoder:
+        # ragged (one batched prefill per admission round) covers every
+        # decoder-only stack: paged globals + ring locals mask their
+        # writes, paged MLA latents scatter per row, recurrent/RWKV
+        # carries are length-masked.  Enc-dec keeps the per-slot path —
+        # the cross K/V of rows not in the round would be overwritten.
+        ragged_ok = not cfg.is_encoder_decoder
+        ragged = ragged_ok if sv.ragged_prefill is None else sv.ragged_prefill
+        if ragged and not ragged_ok:
             raise ValueError(
-                "--continuous needs per-sequence decode positions; "
-                "MLA / enc-dec caches are lockstep-only")
-        attn_only = set(cfg.layer_kinds()) <= {GLOBAL_ATTN, LOCAL_ATTN}
-        ragged = attn_only if sv.ragged_prefill is None else sv.ragged_prefill
-        if ragged and not attn_only:
-            raise ValueError(
-                "--ragged-prefill needs an attention-only decoder; "
-                "recurrent/RWKV state would scan the padding")
+                "--ragged-prefill needs a decoder-only stack; the encoder "
+                "output is per-round, so enc-dec prefills per slot")
         # hash-addressed prefix caching: needs the chunked-prefill seam,
         # which covers all-global paged decoders only (ring locals would
         # have to replay the evicted prefix; vision frontends shift pos 0)
@@ -321,8 +323,11 @@ class ServingEngine:
             raise ValueError(f"--overcommit {self.overcommit} must be >= 1")
 
         self.prefill, self.decode = make_serve_steps(cfg, ctx)
-        self.cache = init_cache(cfg, B, self.max_len, layout="paged",
-                                page_budget=budget, paged_tables="empty")
+        from repro.launch.specs import src_len_for
+        self.src_len = src_len_for(cfg, self.max_len)
+        self.cache = init_cache(cfg, B, self.max_len, self.src_len,
+                                layout="paged", page_budget=budget,
+                                paged_tables="empty")
 
         # page→data-shard locality (see PagePool); one shard when the budget
         # doesn't split evenly or a shard couldn't hold a full request
@@ -354,6 +359,18 @@ class ServingEngine:
         self.prefix_hits = 0         # admissions reusing >= 1 cached page
         self.prefix_misses = 0
         self.cow_copies = 0          # copy-on-write page duplications
+
+    def _src_embeds(self, req_id: int):
+        """Deterministic stub frontend embeddings for one enc-dec request,
+        keyed on the request id alone — an evict-replay or a restored
+        incarnation re-synthesizes the identical encoder input, keeping
+        the cross K/V (and so the whole continuation) byte-identical."""
+        import jax
+        import jax.numpy as jnp
+
+        return 0.02 * jax.random.normal(
+            jax.random.key(req_id), (1, self.src_len, self.cfg.d_model),
+            jnp.float32)
 
     # -- queue -------------------------------------------------------------
     def submit(self, request: Request) -> None:
@@ -555,9 +572,10 @@ class ServingEngine:
         for b, r in admitted:
             if not self.ragged:
                 view = cache_slot_view(self.cache, self.B, b)
-                logits, view = self.prefill(
-                    self.params, {"tokens": jnp.asarray(r.tokens[None])},
-                    view)
+                batch = {"tokens": jnp.asarray(r.tokens[None])}
+                if self.cfg.is_encoder_decoder:
+                    batch["src_embeds"] = self._src_embeds(r.req)
+                logits, view = self.prefill(self.params, batch, view)
                 self.cache = cache_slot_merge(self.cache, view, self.B, b)
                 tok = int(jnp.argmax(logits[0, -1]))
             else:

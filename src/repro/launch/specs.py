@@ -157,22 +157,43 @@ def decode_attn_bytes(cfg: ModelConfig, shape: ShapeConfig, run=None,
       are prefix pages aliased across the whole batch (the engine's
       hash-addressed prefix cache), physically read once per step instead
       of B times.  Equal to ``kernel`` at share 0.
+    * ``dense_expanded`` — MLA only: the hypothetical head-expanded
+      cache (per-head nope+rope keys and values, B·S_max tokens) a naive
+      MQA/MHA materialization would read.  The latent/expanded ratio is
+      MLA's entire decode-bandwidth case; for non-MLA it equals
+      ``dense``.
+
+    Per-token bytes follow the layout the decode step actually walks:
+    GQA reads K and V heads (``2·K·hd``); MLA decode scores and
+    accumulates in latent space, so every path but ``dense_expanded``
+    charges ``kv_lora_rank + qk_rope_head_dim`` per token — the
+    compressed latents ARE the cache, there is no expansion to re-read.
 
     The ratio reference/kernel ≈ 1/occupancy is the modeled win the
     ``serve_decode`` benchmark lane sweeps; kernel/kernel_unique is the
-    dedup win ``prefix_cache`` sweeps.
+    dedup win ``prefix_cache`` sweeps; dense_expanded/kernel is the MLA
+    lane's headline.
     """
     from repro.configs.base import GLOBAL_ATTN
     from repro.models.model import num_pages
-    if path not in ("dense", "reference", "kernel", "kernel_unique"):
+    if path not in ("dense", "reference", "kernel", "kernel_unique",
+                    "dense_expanded"):
         raise ValueError(path)
     B, S = shape.global_batch, shape.seq_len
     n_global = sum(1 for k in cfg.layer_kinds() if k == GLOBAL_ATTN)
     K, hd = cfg.num_kv_heads, cfg.head_dim
     isize = jnp.dtype(cfg.dtype).itemsize
+    if cfg.use_mla:
+        tok_bytes = (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * isize
+        expanded_bytes = cfg.num_heads * (
+            cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+            + cfg.v_head_dim) * isize
+    else:
+        tok_bytes = 2 * K * hd * isize                     # K and V
+        expanded_bytes = tok_bytes
     ps = cfg.page_size
     pps = num_pages(S, ps)
-    if path == "dense":
+    if path in ("dense", "dense_expanded"):
         tokens = B * S
     elif path == "reference":
         tokens = B * pps * ps
@@ -183,7 +204,8 @@ def decode_attn_bytes(cfg: ModelConfig, shape: ShapeConfig, run=None,
             tokens = unique_decode_pages(B, resident, run) * ps
         else:
             tokens = B * resident * ps
-    return 2 * tokens * K * hd * isize * n_global          # K and V
+    per_tok = expanded_bytes if path == "dense_expanded" else tok_bytes
+    return tokens * per_tok * n_global
 
 
 def unique_decode_pages(batch: int, resident_per_seq: int, run=None) -> int:
@@ -211,7 +233,13 @@ def decode_arithmetic_intensity(cfg: ModelConfig, shape: ShapeConfig,
     occ = getattr(run, "page_occupancy", 1.0) if run is not None else 1.0
     pps = num_pages(S, cfg.page_size)
     resident = max(int(-(-pps * occ // 1)), 1) * cfg.page_size
-    flops = 4 * B * resident * cfg.num_heads * cfg.head_dim * n_global
+    if cfg.use_mla:
+        # latent-space MACs: scores over lora+rd, context over lora
+        per_tok = 2 * cfg.num_heads * (2 * cfg.kv_lora_rank
+                                       + cfg.qk_rope_head_dim)
+    else:
+        per_tok = 4 * cfg.num_heads * cfg.head_dim
+    flops = B * resident * per_tok * n_global
     return flops / max(decode_attn_bytes(cfg, shape, run, path), 1)
 
 
@@ -275,17 +303,21 @@ def placement_report(cfg: ModelConfig, shape: ShapeConfig, run, mesh: Mesh,
     if kind != "train" and cfg.cache_layout == "paged":
         # the admission-control number: pages the scheduler must find free
         out["cache_pages"] = float(decode_page_budget(cfg, shape, run))
-    if kind == "decode" and cfg.cache_layout == "paged" and not cfg.use_mla:
+    if kind == "decode" and cfg.cache_layout == "paged":
         # per-step decode bandwidth pricing: the scheduler/roofline should
         # charge the kernel's resident-page walk, not the dense-view bound
-        # (MLA decode reads the latent cache, not the page pool — its
-        # paged walk is still open, see ROADMAP)
+        # (for MLA that walk reads latent pages — priced as such)
         import numpy as np
         n_dev = int(np.prod(list(mesh.shape.values())))   # AbstractMesh-safe
         out["decode_attn_gb_step"] = decode_attn_bytes(
             cfg, shape, run, "kernel") / n_dev / 1e9
         out["decode_attn_gb_step_ref"] = decode_attn_bytes(
             cfg, shape, run, "reference") / n_dev / 1e9
+        if cfg.use_mla:
+            # what the step would read had the latents been expanded to
+            # per-head K/V — the scheduler's case for the latent layout
+            out["decode_attn_gb_step_dense_equiv"] = decode_attn_bytes(
+                cfg, shape, run, "dense_expanded") / n_dev / 1e9
         if getattr(run, "prefix_share_frac", 0.0) > 0.0:
             # dedup-aware residency/bandwidth: aliased prefix pages are
             # physically one page — price what is actually resident/read,

@@ -235,6 +235,96 @@ def decode_attention_paged(
                                 logit_cap=logit_cap)
 
 
+def mla_prefill_attention_paged(
+    q_eff: jax.Array,        # (B, S0, H, lora) — W_kc-absorbed queries
+    q_rope: jax.Array,       # (B, S0, H, rd)   — rotated rope queries
+    ckv_pages: jax.Array,    # (P, page_size, lora) shared latent pool
+    krope_pages: jax.Array,  # (P, page_size, rd)
+    page_table: jax.Array,   # (B, pages_per_seq) int32; -1 = unallocated
+    pos_q: jax.Array,        # (B, S0) absolute positions of the chunk queries
+    lengths: jax.Array,      # (B,) valid chunk tokens; 0 = inactive row
+    *,
+    scale: float,
+) -> jax.Array:
+    """Chunked/ragged MLA prefill over the latent page table.
+
+    The latent cache is MQA-shaped — ONE shared latent "kv head" serves
+    all H query heads; scores are ``q_eff·ckv + q_rope·krope`` and the
+    value read is the latent itself (``W_vc`` is applied outside).  Same
+    write-then-read contract as :func:`prefill_attention_paged`: the
+    chunk's latents were already scattered into the pool, so one masked
+    walk covers the cached prefix and within-chunk causality.  Returns
+    the latent context (B, S0, H, lora)."""
+    B, S0, H, lora = q_eff.shape
+    ps = ckv_pages.shape[1]
+    pps = page_table.shape[1]
+    T = pps * ps
+    cb = jnp.take(ckv_pages, page_table, axis=0, mode="fill",
+                  fill_value=0)                      # (B, pps, ps, lora)
+    rb = jnp.take(krope_pages, page_table, axis=0, mode="fill", fill_value=0)
+    cb = cb.reshape(B, T, lora)
+    rb = rb.reshape(B, T, rb.shape[-1])
+    pos_k = jnp.where(jnp.repeat(page_table >= 0, ps, axis=1),
+                      jnp.arange(T, dtype=jnp.int32)[None, :], -1)   # (B, T)
+    s = jnp.einsum("bshl,btl->bsht", q_eff.astype(jnp.float32),
+                   cb.astype(jnp.float32))
+    s = s + jnp.einsum("bshr,btr->bsht", q_rope.astype(jnp.float32),
+                       rb.astype(jnp.float32))
+    s = s * scale
+    valid = (pos_k[:, None, :] >= 0) \
+        & (pos_k[:, None, :] <= pos_q[:, :, None]) \
+        & (jnp.arange(S0, dtype=jnp.int32)[None, :, None]
+           < lengths.astype(jnp.int32)[:, None, None])               # (B,S0,T)
+    vm = valid[:, :, None, :]
+    s = jnp.where(vm, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    # explicit p-masking: fully-dead rows would see exp(NEG_INF-NEG_INF)==1
+    p = jnp.where(vm, jnp.exp(s - m), 0.0)
+    l = p.sum(axis=-1)
+    ctx_lat = jnp.einsum("bsht,btl->bshl", p, cb.astype(jnp.float32))
+    return (ctx_lat / jnp.maximum(l, 1e-37)[..., None]).astype(q_eff.dtype)
+
+
+def mla_decode_attention_paged(
+    q_eff: jax.Array,        # (B, H, lora)
+    q_rope: jax.Array,       # (B, H, rd)
+    ckv_pages: jax.Array,    # (P, page_size, lora)
+    krope_pages: jax.Array,  # (P, page_size, rd)
+    page_table: jax.Array,   # (B, pages_per_seq)
+    pos_q: jax.Array,        # scalar or (B,)
+    *,
+    scale: float,
+) -> jax.Array:
+    """Reference paged MLA decode walk (gather + dense softmax) — the
+    equivalence oracle for the Pallas kernel / scan fallback.  Returns the
+    latent context (B, H, lora); rows with ``pos_q < 0`` return zeros."""
+    B, H, lora = q_eff.shape
+    ps = ckv_pages.shape[1]
+    pps = page_table.shape[1]
+    T = pps * ps
+    cb = jnp.take(ckv_pages, page_table, axis=0, mode="fill",
+                  fill_value=0).reshape(B, T, lora)
+    rb = jnp.take(krope_pages, page_table, axis=0, mode="fill",
+                  fill_value=0).reshape(B, T, krope_pages.shape[-1])
+    pos_k = jnp.where(jnp.repeat(page_table >= 0, ps, axis=1),
+                      jnp.arange(T, dtype=jnp.int32)[None, :], -1)   # (B, T)
+    s = jnp.einsum("bhl,btl->bht", q_eff.astype(jnp.float32),
+                   cb.astype(jnp.float32))
+    s = s + jnp.einsum("bhr,btr->bht", q_rope.astype(jnp.float32),
+                       rb.astype(jnp.float32))
+    s = s * scale
+    pq = jnp.reshape(jnp.broadcast_to(jnp.asarray(pos_q, jnp.int32), (B,)),
+                     (B, 1))
+    valid = (pos_k >= 0) & (pos_k <= pq)                             # (B, T)
+    vm = valid[:, None, :]
+    s = jnp.where(vm, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.where(vm, jnp.exp(s - m), 0.0)
+    l = p.sum(axis=-1)
+    ctx_lat = jnp.einsum("bht,btl->bhl", p, cb.astype(jnp.float32))
+    return (ctx_lat / jnp.maximum(l, 1e-37)[..., None]).astype(q_eff.dtype)
+
+
 # ---------------------------------------------------------------------------
 # GQA block
 # ---------------------------------------------------------------------------
@@ -575,6 +665,51 @@ def _update_decode_kv_paged(cache: Cache, k, v, pos) -> Cache:
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2)
 # ---------------------------------------------------------------------------
+def _write_prefill_latent_paged(cache: Cache, ckv, krope, lengths,
+                                pos) -> Cache:
+    """Scatter a prefill chunk's latents into the paged latent pool.
+
+    ``ckv (B, S0, lora)`` / ``krope (B, S0, rd)`` are the compressed
+    latents and rotated rope keys; token ``s`` of row ``b`` lands at
+    absolute position ``pos[b, s]`` (slot ``pos % ps`` of logical page
+    ``pos // ps``).  Only tokens ``s < lengths[b]`` write; invalid rows
+    and unallocated table entries redirect one past the pool and are
+    dropped (``mode="drop"``) — same contract as the GQA writers."""
+    cp, rp, pt = cache["ckv_pages"], cache["krope_pages"], cache["page_table"]
+    B, S0 = ckv.shape[:2]
+    ps = cp.shape[1]
+    pps = pt.shape[1]
+    pidx = pos // ps                                           # (B, S0)
+    entry = jnp.take_along_axis(pt, jnp.clip(pidx, 0, pps - 1), axis=1)
+    valid = (jnp.arange(S0, dtype=jnp.int32)[None, :]
+             < lengths.astype(jnp.int32)[:, None]) \
+        & (entry >= 0) & (pidx < pps)
+    phys = jnp.where(valid, entry, jnp.int32(cp.shape[0]))     # (B, S0)
+    off = pos % ps
+    cp = cp.at[phys, off].set(ckv.astype(cp.dtype), mode="drop")
+    rp = rp.at[phys, off].set(krope.astype(rp.dtype), mode="drop")
+    return {"ckv_pages": cp, "krope_pages": rp, "page_table": pt}
+
+
+def _update_decode_latent_paged(cache: Cache, ckv, krope, pos) -> Cache:
+    """Insert one token's latent into the page pool.  ``ckv (B, lora)`` /
+    ``krope (B, rd)``; ``pos`` is scalar or (B,).  Rows with pos < 0
+    (inactive slots) and unallocated entries scatter out of bounds and are
+    dropped."""
+    cp, rp, pt = cache["ckv_pages"], cache["krope_pages"], cache["page_table"]
+    B = ckv.shape[0]
+    ps = cp.shape[1]
+    posb = jnp.broadcast_to(jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,)),
+                            (B,))
+    posc = jnp.maximum(posb, 0)
+    entry = jnp.take_along_axis(pt, (posc // ps)[:, None], axis=1)[:, 0]
+    phys = jnp.where((posb >= 0) & (entry >= 0), entry, cp.shape[0])
+    off = posc % ps
+    cp = cp.at[phys, off].set(ckv.astype(cp.dtype), mode="drop")
+    rp = rp.at[phys, off].set(krope.astype(rp.dtype), mode="drop")
+    return {"ckv_pages": cp, "krope_pages": rp, "page_table": pt}
+
+
 def _mla_q(cfg: ModelConfig, p, x, pos) -> Tuple[jax.Array, jax.Array]:
     """Returns (q_nope (B,S,H,nope), q_rope (B,S,H,rd)) — rope applied."""
     nope, rd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
@@ -597,18 +732,65 @@ def mla_attention(
     mode: str,
     cache: Optional[Cache],
     pos: jax.Array,
+    lengths: Optional[jax.Array] = None,   # ragged prefill: (B,) true lens
 ) -> Tuple[jax.Array, Optional[Cache]]:
+    B = x.shape[0]
     H = cfg.num_heads
     nope, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     lora = cfg.kv_lora_rank
     scale = (nope + rd) ** -0.5
     kv_b = p["kv_b"]                                      # (lora, H, nope+vd)
+    w_kc = kv_b[..., :nope]                               # (lora, H, nope)
+    w_vc = kv_b[..., nope:]                               # (lora, H, vd)
 
     kv_a = x @ p["kv_a"]                                  # (B,S,lora+rd)
     ckv = rms_norm(kv_a[..., :lora], p["kv_norm"], cfg.norm_eps)
     k_rope = kv_a[..., None, lora:]                       # (B,S,1,rd) shared head
 
-    if mode == "full":
+    paged = cache is not None and "ckv_pages" in cache
+    if mode == "full" and paged:
+        # ---- paged latent prefill.  Writes always scatter the chunk's
+        # latents into the pool (length-masked per row).  The attention
+        # read splits like the GQA path: lockstep/ragged chunks opening at
+        # position 0 score against the FRESH fp32 latents (matching the
+        # dense oracle bit-for-bit in math — the pool stores the cache
+        # dtype, and rounding keys through it would cost ~1e-3 vs dense),
+        # while chunked prefix prefill (2-D pos) must read the pool — the
+        # cached prefix only exists there, and both sides of a chunk split
+        # see identical pool bytes, keeping replay bit-exact.
+        S0 = x.shape[1]
+        pos_q = pos if pos.ndim == 2 else \
+            jnp.broadcast_to(pos[None, :], (B, S0))       # (B, S0) absolute
+        lens = jnp.full((B,), S0, jnp.int32) if lengths is None \
+            else lengths.astype(jnp.int32)
+        q_nope, q_rope = _mla_q(cfg, p, x, pos)
+        k_rope = apply_rope(k_rope, pos, cfg.rope_theta)
+        new_cache = _write_prefill_latent_paged(
+            cache, ckv, k_rope[:, :, 0], lens, pos_q)
+        q_eff = jnp.einsum("bshe,lhe->bshl", q_nope, w_kc)
+        if pos.ndim == 2:
+            ctx_lat = mla_prefill_attention_paged(
+                q_eff, q_rope, new_cache["ckv_pages"],
+                new_cache["krope_pages"], new_cache["page_table"],
+                pos_q, lens, scale=scale)
+        else:
+            # fresh-latent absorbed walk; causality isolates each row's
+            # last valid query from the ragged padding keys (they sit at
+            # later positions), exactly like the dense flash path
+            s = jnp.einsum("bshl,btl->bsht", q_eff.astype(jnp.float32),
+                           ckv.astype(jnp.float32))
+            s = s + jnp.einsum("bshr,btr->bsht", q_rope.astype(jnp.float32),
+                               k_rope[:, :, 0].astype(jnp.float32))
+            s = s * scale
+            causal = (jnp.arange(S0)[None, :, None]
+                      >= jnp.arange(S0)[None, None, :])[:, :, None, :]
+            s = jnp.where(causal, s, NEG_INF)
+            pr = jax.nn.softmax(s, axis=-1)
+            ctx_lat = jnp.einsum("bsht,btl->bshl", pr,
+                                 ckv.astype(jnp.float32)).astype(x.dtype)
+        out = jnp.einsum("bshl,lhe->bshe", ctx_lat.astype(x.dtype),
+                         w_vc.astype(x.dtype))
+    elif mode == "full":
         q_nope, q_rope = _mla_q(cfg, p, x, pos)
         k_rope = apply_rope(k_rope, pos, cfg.rope_theta)
         kv = jnp.einsum("bsl,lhe->bshe", ckv, kv_b.astype(ckv.dtype))  # expand
@@ -631,11 +813,40 @@ def mla_attention(
             cp = jax.lax.dynamic_update_slice_in_dim(
                 cache["pos"], pos.astype(jnp.int32), pos[0], axis=0)
             new_cache = {"ckv": c, "krope": r, "pos": cp}
+    elif paged:
+        # ---- paged latent decode: per-sequence positions (continuous
+        # batching; inactive slots carry -1).  Weight absorption makes the
+        # walk MQA-shaped — H query heads against ONE latent kv head of
+        # width lora+rd — so bytes/step are the latent pages, not the
+        # hypothetical expanded K/V.
+        posb = jnp.broadcast_to(
+            jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,)), (B,))
+        pos_r = jnp.reshape(posb, (-1, 1))                # (B, 1) for rope
+        q_nope, q_rope = _mla_q(cfg, p, x, pos_r)
+        k_rope = apply_rope(k_rope, pos_r, cfg.rope_theta)
+        new_cache = _update_decode_latent_paged(
+            cache, ckv[:, 0], k_rope[:, 0, 0], posb)
+        cp_pages, rp_pages = new_cache["ckv_pages"], new_cache["krope_pages"]
+        pt = new_cache["page_table"]
+        q_eff = jnp.einsum("bshe,lhe->bshl", q_nope, w_kc)  # (B,1,H,lora)
+        if ctx.use_pallas:
+            from repro.kernels.ops import mla_paged_decode_bhd
+            q_lat = jnp.concatenate([q_eff[:, 0], q_rope[:, 0]], -1)
+            ctx_lat = mla_paged_decode_bhd(
+                q_lat, cp_pages, rp_pages, pt, posb, scale=scale)
+        else:
+            from repro.kernels.paged_attention import mla_paged_decode_jnp
+            q_lat = jnp.concatenate([q_eff[:, 0], q_rope[:, 0]], -1)
+            ctx_lat = mla_paged_decode_jnp(
+                q_lat, cp_pages, rp_pages, pt, posb, scale=scale)
+        out = jnp.einsum("bshl,lhe->bshe", ctx_lat[:, None].astype(x.dtype),
+                         w_vc.astype(x.dtype))
     else:
-        # ---- decode with weight absorption: score and read in latent space
+        # ---- dense decode with weight absorption: score and read in
+        # latent space against the lockstep dense latent cache
         assert pos.ndim == 0, \
-            "MLA decode is lockstep-only (latent cache is dense); " \
-            "per-sequence positions are a paged-GQA feature"
+            "per-sequence MLA decode positions need the paged latent " \
+            "cache (cache_layout='paged'); the dense cache is lockstep-only"
         q_nope, q_rope = _mla_q(cfg, p, x, pos[None] if pos.ndim == 0 else pos)
         k_rope = apply_rope(k_rope, jnp.reshape(pos, (1,)), cfg.rope_theta)
         c_new = jax.lax.dynamic_update_slice_in_dim(
@@ -647,8 +858,6 @@ def mla_attention(
             cache["pos"], jnp.reshape(pos, (1,)).astype(jnp.int32), pos, axis=0)
         new_cache = {"ckv": c_new, "krope": r_new, "pos": cp}
 
-        w_kc = kv_b[..., :nope]                            # (lora,H,nope)
-        w_vc = kv_b[..., nope:]                            # (lora,H,vd)
         q_eff = jnp.einsum("bshe,lhe->bshl", q_nope, w_kc)  # absorb W_kc
         s = jnp.einsum("bshl,btl->bsht", q_eff.astype(jnp.float32),
                        c_new.astype(jnp.float32))

@@ -77,7 +77,7 @@ def apply_block(
         sub = cache.get("attn") if cache is not None else None
         if cfg.use_mla:
             y, nc = mla_attention(cfg, p["attn"], x, ctx, mode=amode,
-                                  cache=sub, pos=pos)
+                                  cache=sub, pos=pos, lengths=lengths)
         else:
             y, nc = gqa_attention(cfg, p["attn"], x, ctx, kind=kind,
                                   mode=amode, cache=sub, pos=pos,
@@ -86,12 +86,14 @@ def apply_block(
             new_cache["attn"] = nc
     elif kind == RECURRENT:
         sub = cache.get("rec") if cache is not None else None
-        y, nc = rglru_block(cfg, p["rec"], x, ctx, mode=amode, cache=sub)
+        y, nc = rglru_block(cfg, p["rec"], x, ctx, mode=amode, cache=sub,
+                            lengths=lengths)
         if new_cache is not None:
             new_cache["rec"] = nc
     elif kind == RWKV:
         sub = cache.get("rwkv") if cache is not None else None
-        y, nc = rwkv_time_mix(cfg, p["tm"], x, ctx, mode=amode, cache=sub)
+        y, nc = rwkv_time_mix(cfg, p["tm"], x, ctx, mode=amode, cache=sub,
+                              lengths=lengths)
         if new_cache is not None:
             new_cache["rwkv"] = nc
     else:
@@ -123,14 +125,16 @@ def apply_block(
         x = ctx.constrain(rms_norm(h, p["cm_norm"], cfg.norm_eps),
                           ("batch", "seq", "embed_act"))
         sub = new_cache.get("rwkv") if new_cache is not None else None
-        y, nc = rwkv_channel_mix(cfg, p["cm"], x, ctx, mode=amode, cache=sub)
+        y, nc = rwkv_channel_mix(cfg, p["cm"], x, ctx, mode=amode, cache=sub,
+                                 lengths=lengths)
         if new_cache is not None:
             new_cache["rwkv"] = nc
     else:
         x = ctx.constrain(rms_norm(h, p["ffn_norm"], cfg.norm_eps),
                           ("batch", "seq", "embed_act"))
         if "moe" in p and not dense_only:
-            y, aux = moe_ffn(cfg, p["moe"], x, ctx)
+            y, aux = moe_ffn(cfg, p["moe"], x, ctx,
+                             dropless=mode != "train")
         else:
             y = dense_ffn(p["ffn"], x, cfg.act, ctx)
     y = ctx.constrain(y, ("batch", "resid_seq", "embed_act"))
@@ -315,8 +319,10 @@ def forward(
     padding keys (they sit at later positions), and cache writes are
     masked per row — length-0 rows (active continuous-batching slots not
     being prefilled this round) leave the cache untouched.  Supported for
-    attention-only stacks (paged globals + ring locals): recurrent / RWKV
-    / MLA-latent / enc-dec states scan padding into their carries.
+    every decoder-only stack: paged globals + ring locals mask their
+    writes, paged MLA latents scatter per row, and recurrent / RWKV
+    carries are length-masked (padding steps neither read nor write
+    state).  Enc-dec keeps the per-slot path (cross K/V is per round).
 
     ``starts`` makes a ragged prefill *chunked* (prefix caching): row
     ``b``'s tokens are the uncached TAIL of its prompt, opening at
@@ -331,18 +337,21 @@ def forward(
     if lengths is not None:
         if mode != "prefill":
             raise ValueError("lengths is a prefill-only argument")
-        bad = [k for k in set(cfg.layer_kinds())
-               if k not in (GLOBAL_ATTN, LOCAL_ATTN)]
-        if bad or cfg.use_mla or cfg.is_encoder_decoder:
+        if cfg.is_encoder_decoder:
             raise NotImplementedError(
-                f"ragged prefill needs an attention-only decoder "
-                f"(got {bad or 'mla/enc-dec'}): recurrent state would "
-                f"scan the padding")
+                "ragged prefill needs a decoder-only stack: the cross-"
+                "attention K/V of rows not in this round would be "
+                "overwritten by the new encoder output")
+        if cfg.use_mla and cfg.cache_layout != "paged":
+            raise NotImplementedError(
+                "ragged prefill over MLA needs the paged latent cache "
+                "(the dense MLA cache keeps a lockstep shared position "
+                "slot)")
         lengths = jnp.asarray(lengths, jnp.int32)
     if starts is not None:
         if lengths is None:
             raise ValueError("starts requires ragged prefill (lengths)")
-        if set(cfg.layer_kinds()) != {GLOBAL_ATTN} or cfg.use_mla \
+        if set(cfg.layer_kinds()) != {GLOBAL_ATTN} \
                 or cfg.is_encoder_decoder or cfg.frontend == "vision":
             raise NotImplementedError(
                 "chunked prefix prefill needs an all-global paged decoder "
@@ -413,14 +422,34 @@ def _layer_cache_ab(cfg: ModelConfig, kind: str, B: int, S_max: int,
     in pages (default: worst case, B × ceil(S_max/page_size)).  Masked
     decode writes (inactive slots) scatter out of bounds and are dropped,
     so the pool carries no scratch page — its size stays divisible by the
-    mesh axes and shards cleanly over ``cache_pages``.
-    Ring-buffer (local) and MLA-latent caches stay dense — already bounded.
+    mesh axes and shards cleanly over ``cache_pages``.  MLA global layers
+    page their *latent* cache (compressed latents + rope keys) the same
+    way; only ring-buffer (local) caches stay dense — already bounded.
     """
     K, hd = cfg.num_kv_heads, cfg.head_dim
     dt = cfg.dtype
     c: Tree = {}
     if kind in (GLOBAL_ATTN, LOCAL_ATTN):
-        if cfg.use_mla:
+        if cfg.use_mla and kind == GLOBAL_ATTN and layout == "paged":
+            # paged MLA latent cache: pages hold compressed latents + rope
+            # keys (one shared "kv head" in latent space), walked through
+            # the same per-sequence page tables as the GQA pool.  A latent
+            # token is (kv_lora_rank + qk_rope_head_dim) wide — ~an order
+            # smaller than the expanded K/V it stands for.
+            ps = cfg.page_size
+            pps = num_pages(S_max, ps)
+            pool = page_budget if page_budget is not None else B * pps
+            c["attn"] = {
+                "ckv_pages": P.ParamAb((pool, ps, cfg.kv_lora_rank),
+                                       ("cache_pages", None, "lora"),
+                                       "zeros", dt),
+                "krope_pages": P.ParamAb((pool, ps, cfg.qk_rope_head_dim),
+                                         ("cache_pages", None, None),
+                                         "zeros", dt),
+                "page_table": P.ParamAb((B, pps), ("cache_batch", None),
+                                        "zeros", "int32"),
+            }
+        elif cfg.use_mla:
             c["attn"] = {
                 "ckv": P.ParamAb((B, S_max, cfg.kv_lora_rank),
                                  ("cache_batch", "kv_seq", "lora"), "zeros", dt),
@@ -567,7 +596,7 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
 # batch 1, while the *shared* page pools pass through whole — a prefill
 # run on the view writes only the pages that row's table points to.
 # ---------------------------------------------------------------------------
-_POOL_LEAVES = ("k_pages", "v_pages")
+_POOL_LEAVES = ("k_pages", "v_pages", "ckv_pages", "krope_pages")
 
 
 def _slot_axis(path) -> int:

@@ -8,6 +8,12 @@ capacity per group C = ceil(Sg * top_k / E * capacity_factor).
 
 Returns (out, aux_loss).  Aux loss is the standard load-balancing loss
 (Switch/GShard): E * Σ_e f_e · p_e over routed probability mass.
+
+Serving (``dropless=True``) bypasses the capacity queue entirely: a
+served token's routing must depend on that token alone — capacity drops
+would make a request's logits a function of its co-batched neighbors and
+of ragged padding, breaking per-request determinism under continuous
+batching.
 """
 from __future__ import annotations
 
@@ -27,12 +33,18 @@ def moe_ffn(
     p: Dict[str, jax.Array],
     x: jax.Array,                 # (B, S, D)
     ctx: Ctx,
+    *,
+    dropless: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     B, S, D = x.shape
     E, k = cfg.num_experts, cfg.num_experts_per_tok
     T = B * S
-    Sg = min(cfg.moe_group_size or MOE_GROUP_SIZE, T)
-    assert T % Sg == 0, f"token count {T} not divisible by group size {Sg}"
+    # groups never span rows: capacity contention across sequences would
+    # couple co-batched serving requests (a neighbor's routing could drop
+    # YOUR tokens), and ragged/continuous batching needs per-row prefill
+    # to be batch-composition-independent
+    Sg = min(cfg.moe_group_size or MOE_GROUP_SIZE, S)
+    assert S % Sg == 0, f"row length {S} not divisible by group size {Sg}"
     G = T // Sg
     C = max(1, int(Sg * k / E * cfg.capacity_factor))
 
@@ -40,34 +52,52 @@ def moe_ffn(
     logits = (xt @ p["router"]).astype(jnp.float32)        # (G,Sg,E)
     probs = jax.nn.softmax(logits, axis=-1)
 
-    # --- top-k routing with per-expert capacity ---------------------------
+    # --- top-k routing ----------------------------------------------------
     topk_p, topk_e = jax.lax.top_k(probs, k)               # (G,Sg,k)
     # DeepSeek-V2 normalizes the top-k weights to sum to 1
     topk_p = topk_p / jnp.maximum(topk_p.sum(-1, keepdims=True), 1e-9)
-
     onehot = jax.nn.one_hot(topk_e, E, dtype=jnp.float32)  # (G,Sg,k,E)
-    # position of each (token, choice) within its expert queue, priority by
-    # token order then choice order (GShard convention)
-    flat = onehot.reshape(G, Sg * k, E)
-    pos_in_e = (jnp.cumsum(flat, axis=1) - flat).reshape(G, Sg, k, E)
-    pos = (pos_in_e * onehot).sum(-1)                      # (G,Sg,k)
-    keep = pos < C
-    gates = topk_p * keep
-
-    # dispatch/combine tensors (G, Sg, E, C)
-    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
-    disp = jnp.einsum("gske,gskc->gsec", onehot, pos_oh)
-    comb = jnp.einsum("gsk,gske,gskc->gsec", gates, onehot, pos_oh)
 
     dt = x.dtype
-    xd = jnp.einsum("gsd,gsec->gecd", xt, disp.astype(dt))  # (G,E,C,D)
-    xd = ctx.constrain(xd, ("batch", "experts", None, None))
-    h = activation(jnp.einsum("gecd,edf->gecf", xd, p["we_g"]), cfg.act) \
-        * jnp.einsum("gecd,edf->gecf", xd, p["we_u"])
-    h = ctx.constrain(h, ("batch", "experts", None, "expert_ffn"))
-    ye = jnp.einsum("gecf,efd->gecd", h, p["we_d"])
-    ye = ctx.constrain(ye, ("batch", "experts", None, None))
-    out = jnp.einsum("gecd,gsec->gsd", ye, comb.astype(dt)).reshape(B, S, D)
+    if dropless:
+        # serving path: capacity dropping is a training-throughput
+        # artifact — a served token's output must depend on that token
+        # alone (never on its queue position behind co-batched or padded
+        # tokens), so route exactly what top-k chose via a dense
+        # per-expert sweep.  E× FLOPs at the reduced scales that actually
+        # execute; production placement is priced analytically.
+        w = (onehot * topk_p[..., None]).sum(-2)           # (G,Sg,E)
+        h = activation(jnp.einsum("gsd,edf->gsef", xt, p["we_g"]),
+                       cfg.act) \
+            * jnp.einsum("gsd,edf->gsef", xt, p["we_u"])
+        h = ctx.constrain(h, ("batch", None, "experts", "expert_ffn"))
+        ye = jnp.einsum("gsef,efd->gsed", h, p["we_d"])
+        out = jnp.einsum("gsed,gse->gsd", ye,
+                         w.astype(jnp.float32)).astype(dt).reshape(B, S, D)
+    else:
+        # --- per-expert capacity dispatch (GShard) ------------------------
+        # position of each (token, choice) within its expert queue,
+        # priority by token order then choice order (GShard convention)
+        flat = onehot.reshape(G, Sg * k, E)
+        pos_in_e = (jnp.cumsum(flat, axis=1) - flat).reshape(G, Sg, k, E)
+        pos = (pos_in_e * onehot).sum(-1)                  # (G,Sg,k)
+        keep = pos < C
+        gates = topk_p * keep
+
+        # dispatch/combine tensors (G, Sg, E, C)
+        pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+        disp = jnp.einsum("gske,gskc->gsec", onehot, pos_oh)
+        comb = jnp.einsum("gsk,gske,gskc->gsec", gates, onehot, pos_oh)
+
+        xd = jnp.einsum("gsd,gsec->gecd", xt, disp.astype(dt))  # (G,E,C,D)
+        xd = ctx.constrain(xd, ("batch", "experts", None, None))
+        h = activation(jnp.einsum("gecd,edf->gecf", xd, p["we_g"]), cfg.act) \
+            * jnp.einsum("gecd,edf->gecf", xd, p["we_u"])
+        h = ctx.constrain(h, ("batch", "experts", None, "expert_ffn"))
+        ye = jnp.einsum("gecf,efd->gecd", h, p["we_d"])
+        ye = ctx.constrain(ye, ("batch", "experts", None, None))
+        out = jnp.einsum("gecd,gsec->gsd", ye,
+                         comb.astype(dt)).reshape(B, S, D)
 
     # --- shared experts (always-on dense path) ----------------------------
     if cfg.num_shared_experts:

@@ -77,16 +77,27 @@ def rglru_block(
     *,
     mode: str,
     cache: Optional[Dict[str, jax.Array]],
+    lengths: Optional[jax.Array] = None,   # ragged prefill: (B,) true lens
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, S, _ = u.shape
     x = u @ p["wx"]                                        # (B,S,R)
     x = ctx.constrain(x, ("batch", "seq", "rnn"))
     y = jax.nn.gelu(u @ p["wy"], approximate=True)
     y = ctx.constrain(y, ("batch", "seq", "rnn"))
 
     conv_state = cache["conv"] if cache is not None and mode == "decode" else None
-    x, new_conv = conv1d_causal(p, x, conv_state)
+    xc, new_conv = conv1d_causal(p, x, conv_state)
 
-    log_a, b = rglru_gates(p, x)
+    log_a, b = rglru_gates(p, xc)
+    if lengths is not None and mode != "decode":
+        # ragged prefill: padding steps neither read nor write the carry —
+        # decay 1 (log_a = 0) and input 0 make h coast, so the scan's LAST
+        # step already holds each row's h[lengths-1]
+        lens = lengths.astype(jnp.int32)
+        pad_t = (jnp.arange(S, dtype=jnp.int32)[None, :]
+                 >= lens[:, None])[..., None]              # (B,S,1)
+        log_a = jnp.where(pad_t, 0.0, log_a)
+        b = jnp.where(pad_t, 0.0, b)
     if mode == "decode":
         h_prev = cache["h"].astype(jnp.float32)
         h = jnp.exp(log_a[:, 0]) * h_prev + b[:, 0]
@@ -100,8 +111,25 @@ def rglru_block(
             h_seq = rglru_scan_assoc(log_a, b)
         new_cache = None
         if cache is not None:   # prefill: expose final state
-            new_cache = {"h": h_seq[:, -1].astype(cache["h"].dtype),
-                         "conv": new_conv.astype(cache["conv"].dtype)}
+            h_fin = h_seq[:, -1]
+            conv_fin = new_conv
+            if lengths is not None:
+                # per-row conv window: the CW-1 pre-conv inputs ENDING at
+                # each row's last valid step (lengths == S degenerates to
+                # the trailing window new_conv holds)
+                CW = p["conv_w"].shape[0]
+                xp = jnp.concatenate(
+                    [jnp.zeros((B, CW - 1, x.shape[-1]), x.dtype), x], axis=1)
+                idx = lens[:, None] + jnp.arange(CW - 1, dtype=jnp.int32)
+                conv_fin = jnp.take_along_axis(xp, idx[..., None], axis=1)
+                # length-0 rows are active slots mid-decode: keep their state
+                keep = (lens > 0)
+                h_fin = jnp.where(keep[:, None], h_fin,
+                                  cache["h"].astype(h_fin.dtype))
+                conv_fin = jnp.where(keep[:, None, None], conv_fin,
+                                     cache["conv"].astype(conv_fin.dtype))
+            new_cache = {"h": h_fin.astype(cache["h"].dtype),
+                         "conv": conv_fin.astype(cache["conv"].dtype)}
     h_seq = h_seq.astype(u.dtype)
     out = (y * h_seq) @ p["wo"]
     return out, new_cache

@@ -117,6 +117,7 @@ def rwkv_time_mix(
     *,
     mode: str,
     cache: Optional[Dict[str, jax.Array]],
+    lengths: Optional[jax.Array] = None,   # ragged prefill: (B,) true lens
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     B, S, D = x.shape
     N = cfg.rwkv_head_dim
@@ -135,6 +136,18 @@ def rwkv_time_mix(
         (jnp.tanh(xw @ p["ww_A"]) @ p["ww_B"]).astype(jnp.float32)
     lw = -jnp.exp(ww).reshape(B, S, H, N)
 
+    if lengths is not None and mode != "decode":
+        # ragged prefill: padding steps neither read nor write the state —
+        # k = 0 kills their outer-product write and u-bonus, lw = 0
+        # (decay 1) stops them decaying the carry, so s_fin is each row's
+        # state at lengths-1 (the same convention wkv6_chunked uses for
+        # its own chunk padding)
+        lens = lengths.astype(jnp.int32)
+        pad_t = (jnp.arange(S, dtype=jnp.int32)[None, :]
+                 >= lens[:, None])[..., None, None]        # (B,S,1,1)
+        k = jnp.where(pad_t, jnp.zeros_like(k), k)
+        lw = jnp.where(pad_t, 0.0, lw)
+
     if mode == "decode":
         s0 = cache["s"].astype(jnp.float32)
         o, s_new = wkv6_step(r[:, 0], k[:, 0], v[:, 0], lw[:, 0], p["u"].astype(jnp.float32), s0)
@@ -151,8 +164,19 @@ def rwkv_time_mix(
             o, s_fin = wkv6_chunked(r, k, v, lw, p["u"], s0, ctx.rwkv_chunk)
         new_cache = None
         if cache is not None:
+            shift_fin = x[:, -1]
+            if lengths is not None:
+                last = jnp.maximum(lens - 1, 0)
+                shift_fin = jnp.take_along_axis(
+                    x, last[:, None, None], axis=1)[:, 0]
+                keep = (lens > 0)
+                s_fin = jnp.where(keep[:, None, None, None], s_fin,
+                                  cache["s"].astype(s_fin.dtype))
+                shift_fin = jnp.where(keep[:, None], shift_fin,
+                                      cache["shift_tm"].astype(shift_fin.dtype))
             new_cache = {"s": s_fin.astype(cache["s"].dtype),
-                         "shift_tm": x[:, -1], "shift_cm": cache["shift_cm"]}
+                         "shift_tm": shift_fin.astype(cache["shift_tm"].dtype),
+                         "shift_cm": cache["shift_cm"]}
     o = o.astype(x.dtype)
     o = _group_norm_heads(o, p["ln_x"], cfg.norm_eps)
     o = o * g
@@ -168,6 +192,7 @@ def rwkv_channel_mix(
     *,
     mode: str,
     cache: Optional[Dict[str, jax.Array]],
+    lengths: Optional[jax.Array] = None,   # ragged prefill: (B,) true lens
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     shift_state = cache["shift_cm"] if (cache is not None and mode == "decode") else None
     xx = _token_shift(x, shift_state) - x
@@ -179,5 +204,13 @@ def rwkv_channel_mix(
     new_cache = None
     if cache is not None:
         new_cache = dict(cache)
-        new_cache["shift_cm"] = x[:, -1]
+        shift_fin = x[:, -1]
+        if lengths is not None and mode != "decode":
+            lens = lengths.astype(jnp.int32)
+            last = jnp.maximum(lens - 1, 0)
+            shift_fin = jnp.take_along_axis(x, last[:, None, None],
+                                            axis=1)[:, 0]
+            shift_fin = jnp.where((lens > 0)[:, None], shift_fin,
+                                  cache["shift_cm"].astype(shift_fin.dtype))
+        new_cache["shift_cm"] = shift_fin.astype(cache["shift_cm"].dtype)
     return out, new_cache

@@ -13,13 +13,15 @@ every grid point and proves, per layout:
   the exactly-once / accumulate-in-scratch discipline;
 * accumulator scratch buffers are float32 (online-softmax / state carry
   precision);
-* the paged-decode page walk, evaluated against adversarial page tables
-  (contiguous, mostly-empty, holes inside the live prefix, inactive
-  rows): block indices stay inside the physical pool, ``-1`` holes
-  borrow an already-live page of the *same row* (never physical page 0's
-  bandwidth), and every dead-tail step repeats the previous page so the
-  pipeline issues no new DMA (the NaN-gather / wasted-bandwidth class the
-  flash-decode PR fixed by hand).
+* the paged-decode page walk — for the GQA pool layouts (grouped
+  head-tile grid and ungrouped, across head-tile shapes including
+  G > 4) and the MLA latent-pool layout alike — evaluated against
+  adversarial page tables (contiguous, mostly-empty, holes inside the
+  live prefix, inactive rows): block indices stay inside the physical
+  pool, ``-1`` holes borrow an already-live page of the *same row*
+  (never physical page 0's bandwidth), and every dead-tail step repeats
+  the previous page so the pipeline issues no new DMA (the NaN-gather /
+  wasted-bandwidth class the flash-decode PR fixed by hand).
 """
 from __future__ import annotations
 
@@ -137,38 +139,30 @@ def _paged_tables():
     return pt, pos
 
 
-def _check_paged() -> List[Finding]:
-    import jax.numpy as jnp
-    from repro.kernels.paged_attention import paged_layout
+def _walk_page_specs(layout, path, pt_np, pos_np, pt, pos, ps, n_pool,
+                     points_for) -> List[Finding]:
+    """Adversarial page walk over every ``*_pages`` operand of ``layout``.
 
-    path = "src/repro/kernels/paged_attention.py"
+    ``points_for(b, i)`` yields the grid point(s) covering row ``b`` at
+    page-table step ``i`` (several for head-tiled grids).  The physical
+    page is the first block coordinate the index map returns."""
     out: List[Finding] = []
-    pt_np, pos_np = _paged_tables()
-    pt, pos = jnp.asarray(pt_np), jnp.asarray(pos_np)
+
+    def fail(msg: str) -> None:
+        out.append(Finding(RULE_ID, path, 0, f"{layout.name}: {msg}"))
+
     B, pps = pt_np.shape
-    ps, n_pool = 4, 8
-
-    for grouped in (True, False):
-        layout = paged_layout(B=B, K=2, G=2, hd=8, ps=ps, pps=pps,
-                              n_pool=n_pool, grouped=grouped)
-        # structural walk: index maps see the prefetched (pt, pos) operands
-        out += _check_layout(layout, path,
-                             grid_args=lambda p: p + (pt, pos))
-
-        def fail(msg: str) -> None:
-            out.append(Finding(RULE_ID, path, 0, f"{layout.name}: {msg}"))
-
-        kv = [s for s in layout.in_specs if s.name.endswith("_pages")]
-        if not kv:
-            fail("no *_pages operand found — page walk unchecked")
-            continue
-        for spec in kv:
-            for b in range(B):
-                live = {int(e) for e in pt_np[b] if e >= 0}
-                last_live = max(int(pos_np[b]), 0) // ps
-                prev = None
-                for i in range(pps):
-                    point = (b, i) if grouped else (b, 0, i)
+    kv = [s for s in layout.in_specs if s.name.endswith("_pages")]
+    if not kv:
+        fail("no *_pages operand found — page walk unchecked")
+        return out
+    for spec in kv:
+        for b in range(B):
+            live = {int(e) for e in pt_np[b] if e >= 0}
+            last_live = max(int(pos_np[b]), 0) // ps
+            prev: dict = {}
+            for i in range(pps):
+                for point in points_for(b, i):
                     page = int(spec.index_map(*point, pt, pos)[0])
                     if not 0 <= page < n_pool:
                         fail(f"{spec.name}: row {b} step {i} fetches "
@@ -180,14 +174,67 @@ def _check_paged() -> List[Finding]:
                              f"{i} but fetches page {page}, not an "
                              f"already-live page of that row {sorted(live)}"
                              " — holes must cost no extra bandwidth")
-                    if i > last_live and prev is not None and page != prev:
+                    key = point[:-1]       # pipeline: page dim is last
+                    if i > last_live and key in prev \
+                            and page != prev[key]:
                         fail(f"{spec.name}: dead-tail step {i} of row {b} "
-                             f"fetches page {page} != previous {prev} — "
-                             "the tail must repeat its block index so no "
+                             f"fetches page {page} != previous {prev[key]} "
+                             "— the tail must repeat its block index so no "
                              "new DMA is issued")
-                    prev = page
+                    prev[key] = page
+    return out
+
+
+def _check_paged() -> List[Finding]:
+    import jax.numpy as jnp
+    from repro.kernels.paged_attention import group_tile, paged_layout
+
+    path = "src/repro/kernels/paged_attention.py"
+    out: List[Finding] = []
+    pt_np, pos_np = _paged_tables()
+    pt, pos = jnp.asarray(pt_np), jnp.asarray(pos_np)
+    B, pps = pt_np.shape
+    ps, n_pool = 4, 8
+
+    # (K, G) sweeps the head-tile grid: kt = K (one tile), kt < K
+    # (several tiles per row), and the large-G regime the tiler exists
+    # for (G > 4, kt clamps to 1)
+    for K, G, grouped in ((2, 2, True), (4, 2, True), (4, 8, True),
+                          (2, 2, False)):
+        layout = paged_layout(B=B, K=K, G=G, hd=8, ps=ps, pps=pps,
+                              n_pool=n_pool, grouped=grouped)
+        # structural walk: index maps see the prefetched (pt, pos) operands
+        out += _check_layout(layout, path,
+                             grid_args=lambda p: p + (pt, pos))
+        # both the grouped head-tile grid (B, K//kt, pps) and the
+        # ungrouped grid (B, K, pps) iterate heads in dim 1
+        n_t = K // group_tile(K, G) if grouped else K
+        out += _walk_page_specs(
+            layout, path, pt_np, pos_np, pt, pos, ps, n_pool,
+            lambda b, i: [(b, t, i) for t in range(n_t)])
+    return out
+
+
+def _check_mla_paged() -> List[Finding]:
+    import jax.numpy as jnp
+    from repro.kernels.paged_attention import mla_paged_layout
+
+    path = "src/repro/kernels/paged_attention.py"
+    out: List[Finding] = []
+    pt_np, pos_np = _paged_tables()
+    pt, pos = jnp.asarray(pt_np), jnp.asarray(pos_np)
+    B, pps = pt_np.shape
+    ps, n_pool = 4, 8
+
+    layout = mla_paged_layout(B=B, H=2, lora=8, rd=4, ps=ps, pps=pps,
+                              n_pool=n_pool)
+    out += _check_layout(layout, path, grid_args=lambda p: p + (pt, pos))
+    # latent grid is (B, pps): one fused block walks both latent pools
+    out += _walk_page_specs(
+        layout, path, pt_np, pos_np, pt, pos, ps, n_pool,
+        lambda b, i: [(b, i)])
     return out
 
 
 def check() -> List[Finding]:
-    return _check_simple_layouts() + _check_paged()
+    return _check_simple_layouts() + _check_paged() + _check_mla_paged()

@@ -88,10 +88,17 @@ def check() -> List[Finding]:
     meshes = [("prod", make_abstract_production_mesh()),
               ("multipod", make_abstract_production_mesh(multi_pod=True))]
 
+    import dataclasses
+
     for cfg_name in list_configs():
         cfg = get_config(cfg_name)
         params_ab = MP.abstract_params(cfg)
         cache_ab = _cache_ab(cfg, decode_shape)
+        # the serving fast path runs every config paged regardless of its
+        # default layout — the page pools (including MLA latent pools)
+        # must shard on both meshes too
+        paged_ab = _cache_ab(
+            dataclasses.replace(cfg, cache_layout="paged"), decode_shape)
         # optimizer (Adam m/v) and gradient-compression error-feedback
         # state mirror the params tree leaf-for-leaf with replicated
         # scalar counters — the same shapes launch.specs.state_specs
@@ -104,6 +111,7 @@ def check() -> List[Finding]:
             sizes = _mesh_sizes(mesh)
             for tree_name, tree in (("params", params_ab),
                                     ("cache", cache_ab),
+                                    ("cache_paged", paged_ab),
                                     ("opt", opt_ab),
                                     ("err", err_ab)):
                 leaves, _ = jax.tree_util.tree_flatten_with_path(
@@ -123,10 +131,12 @@ def check() -> List[Finding]:
                         continue
                     for msg in _validate_spec(where, spec, ab.shape, sizes):
                         findings.append(Finding(RULE_ID, PATH, 0, msg))
-            try:
-                check_cache_locality(cache_ab, mesh)
-            except ValueError as e:
-                findings.append(Finding(
-                    RULE_ID, PATH, 0,
-                    f"{cfg_name}@{mesh_name}: cache locality — {e}"))
+            for lay_name, tree in (("cache", cache_ab),
+                                   ("cache_paged", paged_ab)):
+                try:
+                    check_cache_locality(tree, mesh)
+                except ValueError as e:
+                    findings.append(Finding(
+                        RULE_ID, PATH, 0,
+                        f"{cfg_name}@{mesh_name}: {lay_name} locality — {e}"))
     return findings

@@ -39,7 +39,8 @@ def _run_serve(cfg, ctx, params, toks):
     return jnp.concatenate(outs, axis=1), cache
 
 
-@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma2-9b", "qwen2.5-32b"])
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma2-9b", "qwen2.5-32b",
+                                  "deepseek-v2-236b"])
 def test_paged_matches_dense_decode(arch):
     """Decode logits must agree (fp32) between the dense fallback and the
     paged layout.  The paged model path is the O(pages) online-softmax walk
@@ -56,7 +57,8 @@ def test_paged_matches_dense_decode(arch):
     assert err < 1e-4, (arch, err)
 
 
-@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma2-9b"])
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma2-9b",
+                                  "deepseek-v2-236b"])
 def test_per_sequence_decode_positions(arch):
     """Continuous batching decodes rows at different positions: an active
     row with a (B,) position vector must produce the same logits as the

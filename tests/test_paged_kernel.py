@@ -72,12 +72,14 @@ def test_kernel_matches_reference_ragged(logit_cap):
 
 @pytest.mark.parametrize("logit_cap", [0.0, 30.0])
 def test_grouped_kernel_matches_ungrouped_and_oracle(logit_cap):
-    """The grouped (one-MXU-call-per-page) variant ≡ the per-kv-head grid
-    ≡ the scan fallback ≡ the gather oracle, on the same ragged tables —
-    including a larger G where the auto heuristic would NOT pick it."""
+    """The grouped (head-tiled, one-MXU-call-per-page) variant ≡ the
+    per-kv-head grid ≡ the scan fallback ≡ the gather oracle, on the same
+    ragged tables.  G sweeps both sides of the old ``G <= 4`` auto-cap
+    (since removed — grouped is the default for every G) plus the
+    non-divisor boundary G=5, where the head tile clamps to kt=1."""
     from repro.kernels.paged_attention import paged_decode_attention
 
-    for G in (1, 2, 8):
+    for G in (1, 2, 4, 5, 8):
         B, K, hd, ps, pps = 4, 2, 16, 8, 6
         P = B * pps
         q = jnp.asarray(RNG.normal(size=(B, K, G, hd)), jnp.float32)
@@ -103,6 +105,83 @@ def test_grouped_kernel_matches_ungrouped_and_oracle(logit_cap):
         np.testing.assert_allclose(np.asarray(grp[act]), np.asarray(ref[act]),
                                    atol=2e-6)
         assert float(jnp.abs(grp[3]).max()) == 0.0  # inactive row → zeros
+
+
+def test_group_tile_and_default_grouped():
+    """The head tiler returns the largest divisor of K whose fused block
+    stays within the MXU budget, and ``grouped=None`` now defaults to the
+    grouped grid for every G (the old ``G <= 4`` auto-cap is gone)."""
+    from repro.kernels.paged_attention import group_tile, paged_decode_attention
+
+    assert group_tile(2, 2) == 2      # whole K fuses: 2·2 ≤ 8
+    assert group_tile(8, 1) == 8
+    assert group_tile(4, 4) == 2      # 4·4 > 8 → tile at 2
+    assert group_tile(2, 5) == 1      # 2·5 > 8 → per-head
+    assert group_tile(2, 8) == 1      # G > budget: one head per tile
+    assert group_tile(3, 4) == 1      # non-divisor G, prime-ish K
+
+    B, K, G, hd, ps, pps = 2, 2, 8, 16, 8, 3
+    P = B * pps
+    q = jnp.asarray(RNG.normal(size=(B, K, G, hd)), jnp.float32)
+    kp = jnp.asarray(RNG.normal(size=(P, K, ps, hd)), jnp.float32)
+    vp = jnp.asarray(RNG.normal(size=(P, K, ps, hd)), jnp.float32)
+    table = _ragged_tables(B, pps, P, [2, 3])
+    pos = jnp.asarray([10, 23], jnp.int32)
+    kw = dict(scale=hd ** -0.5, logit_cap=0.0)
+    auto = paged_decode_attention(q, kp, vp, table, pos, interpret=True, **kw)
+    grp = paged_decode_attention(q, kp, vp, table, pos, interpret=True,
+                                 grouped=True, **kw)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(grp))
+
+
+def test_mla_kernel_matches_scan_and_oracle():
+    """MLA latent flash-decode on ragged tables: the Pallas kernel
+    (interpret), the lax.scan fallback, and a dense gather oracle agree —
+    scores over concat(ckv, k_rope) latents, values = ckv, inactive rows
+    zero."""
+    from repro.kernels.ops import mla_paged_decode_bhd
+    from repro.kernels.paged_attention import (
+        mla_paged_decode_attention, mla_paged_decode_jnp)
+
+    B, H, lora, rd, ps, pps = 4, 3, 16, 8, 8, 6
+    P = B * pps
+    q = jnp.asarray(RNG.normal(size=(B, H, lora + rd)), jnp.float32)
+    ckv = jnp.asarray(RNG.normal(size=(P, ps, lora)), jnp.float32)
+    krope = jnp.asarray(RNG.normal(size=(P, ps, rd)), jnp.float32)
+    table = _ragged_tables(B, pps, P, [3, 6, 1, 4])
+    pos = jnp.asarray([19, 47, 0, -1], jnp.int32)
+    scale = (lora + rd) ** -0.5
+
+    ker = mla_paged_decode_attention(q, ckv, krope, table, pos, scale=scale,
+                                     interpret=True)
+    scan = mla_paged_decode_jnp(q, ckv, krope, table, pos, scale=scale)
+    ops = mla_paged_decode_bhd(q, ckv, krope, table, pos, scale=scale)
+
+    # dense oracle: gather each row's live tokens, full softmax in fp64
+    tnp, pnp = np.asarray(table), np.asarray(pos)
+    qn = np.asarray(q, np.float64)
+    oracle = np.zeros((B, H, lora))
+    for b in range(B):
+        if pnp[b] < 0:
+            continue
+        ks, vs = [], []
+        for t in range(pnp[b] + 1):
+            page = tnp[b, t // ps]
+            assert page >= 0
+            ks.append(np.concatenate([np.asarray(ckv[page, t % ps]),
+                                      np.asarray(krope[page, t % ps])]))
+            vs.append(np.asarray(ckv[page, t % ps]))
+        kmat, vmat = np.stack(ks), np.stack(vs)          # (T, lora+rd/lora)
+        s = qn[b] @ kmat.T * scale                       # (H, T)
+        p = np.exp(s - s.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        oracle[b] = p @ vmat
+    act = slice(0, 3)
+    np.testing.assert_allclose(np.asarray(ker[act]), oracle[act], atol=2e-6)
+    np.testing.assert_allclose(np.asarray(scan[act]), oracle[act], atol=2e-6)
+    np.testing.assert_allclose(np.asarray(ops[act]), oracle[act], atol=2e-6)
+    assert float(jnp.abs(ker[3]).max()) == 0.0
+    assert float(jnp.abs(scan[3]).max()) == 0.0
 
 
 def test_kernel_matches_dense_layout():
@@ -192,11 +271,15 @@ def test_aliased_prefix_pages_match_dealiased_oracle():
 # ---------------------------------------------------------------------------
 # Ragged prefill
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma2-9b"])
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma2-9b",
+                                  "recurrentgemma-9b", "rwkv6-7b",
+                                  "deepseek-v2-236b"])
 def test_ragged_prefill_matches_padded(arch):
     """One batched ragged prefill (prompts padded to the batch max, per-row
     lengths) must produce, per row, the same last-token logits as prefilling
-    that row alone at its exact length — and identical follow-on decode."""
+    that row alone at its exact length — and identical follow-on decode.
+    Covers attention (paged writes masked per row), MLA (latent scatter),
+    and recurrent/RWKV stacks (length-masked carries)."""
     cfg = dataclasses.replace(get_config(arch).reduced(),
                               cache_layout="paged")
     ctx = Ctx(dtype=jnp.float32)
@@ -237,11 +320,14 @@ def test_ragged_prefill_matches_padded(arch):
     assert err < 1e-4, (arch, err)
 
 
-def test_ragged_prefill_preserves_other_rows():
+@pytest.mark.parametrize("arch", ["gemma2-9b", "recurrentgemma-9b",
+                                  "rwkv6-7b", "deepseek-v2-236b"])
+def test_ragged_prefill_preserves_other_rows(arch):
     """Length-0 rows (continuous-batching slots mid-decode) must come out
     of a ragged prefill byte-identical — the padded batch writes nothing
-    through their page tables or ring buffers."""
-    cfg = dataclasses.replace(get_config("gemma2-9b").reduced(),
+    through their page tables, ring buffers, latent pools, or recurrent
+    carries."""
+    cfg = dataclasses.replace(get_config(arch).reduced(),
                               cache_layout="paged")
     ctx = Ctx(dtype=jnp.float32)
     params = init_params(cfg, jax.random.key(0))
@@ -257,18 +343,6 @@ def test_ragged_prefill_preserves_other_rows():
                           lengths=jnp.zeros((B,), jnp.int32))
     for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-
-
-def test_ragged_prefill_rejects_recurrent():
-    cfg = dataclasses.replace(get_config("recurrentgemma-9b").reduced(),
-                              cache_layout="paged")
-    ctx = Ctx(dtype=jnp.float32)
-    params = init_params(cfg, jax.random.key(0))
-    cache = init_cache(cfg, 2, 16)
-    toks = jnp.zeros((2, 8), jnp.int32)
-    with pytest.raises(NotImplementedError, match="ragged"):
-        forward(cfg, params, {"tokens": toks}, ctx, mode="prefill",
-                cache=cache, lengths=jnp.asarray([8, 4], jnp.int32))
 
 
 def test_serve_continuous_pallas_smoke():
